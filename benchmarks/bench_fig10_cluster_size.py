@@ -1,0 +1,17 @@
+"""Fig. 10 sensitivity: cluster size (load level) vs utilization + QoS."""
+from benchmarks.common import QOS_TARGET, Row, figure_runs, summarize
+
+
+def run(full: bool):
+    sizes = [3000, 3500, 4000] if full else [220, 260, 300]
+    rows = []
+    for n in sizes:
+        cfg, ts, runs = figure_runs(full, n_nodes=n)
+        for name in ("leastfit", "oversub", "flexF", "flexL"):
+            s = summarize(ts, runs[name][0], QOS_TARGET)
+            rows.append(Row(f"fig10_n{n}_{name}", runs[name][1] * 1e6, {
+                "request_cpu": s["avg_request_cpu"],
+                "usage_cpu": s["avg_usage_cpu"],
+                "violation_frac": s["qos_violation_frac"],
+            }))
+    return rows

@@ -1,0 +1,15 @@
+"""Fig. 11 sensitivity: scale demand (not requests) by 0.75x / 1x / 1.5x."""
+from benchmarks.common import QOS_TARGET, Row, figure_runs, summarize
+
+
+def run(full: bool):
+    rows = []
+    for scale in (0.75, 1.0, 1.5):
+        cfg, ts, runs = figure_runs(full, demand_scale=scale)
+        for name in ("leastfit", "oversub", "flexF", "flexL"):
+            s = summarize(ts, runs[name][0], QOS_TARGET)
+            rows.append(Row(f"fig11_s{scale}_{name}", runs[name][1] * 1e6, {
+                "usage_cpu": s["avg_usage_cpu"],
+                "violation_frac": s["qos_violation_frac"],
+            }))
+    return rows

@@ -1,0 +1,29 @@
+"""Fig. 6: cluster request + usage (utilization) for the four methods.
+
+Paper claims: FlexF/FlexL admit up to 1.74x more requests and reach up to
+1.6x the utilization of LeastFit, matching Oversub(theta=2)'s utilization.
+"""
+from benchmarks.common import QOS_TARGET, Row, figure_runs, summarize
+
+
+def run(full: bool):
+    cfg, ts, runs = figure_runs(full)
+    rows = []
+    base = None
+    for name, (res, wall) in runs.items():
+        s = summarize(ts, res, QOS_TARGET)
+        if name == "leastfit":
+            base = s
+        rows.append(Row(f"fig6_{name}", wall * 1e6, {
+            "usage_cpu": s["avg_usage_cpu"],
+            "request_cpu": s["avg_request_cpu"],
+            "admitted_frac": s["admitted_frac"],
+        }))
+    for name in ("flexF", "flexL"):
+        s = summarize(ts, runs[name][0], QOS_TARGET)
+        rows.append(Row(f"fig6_{name}_vs_leastfit", 0.0, {
+            "util_gain": s["avg_usage_cpu"] / max(base["avg_usage_cpu"], 1e-9),
+            "request_gain": s["avg_request_cpu"]
+            / max(base["avg_request_cpu"], 1e-9),
+        }))
+    return rows

@@ -1,0 +1,26 @@
+"""Fig. 7: QoS CDF over time + violation percentage per method.
+
+Paper claims: FlexF/FlexL hold the 99% target; Oversub violates ~3.7x more.
+"""
+import jax.numpy as jnp
+
+from benchmarks.common import QOS_TARGET, Row, figure_runs
+
+
+def run(full: bool):
+    cfg, ts, runs = figure_runs(full)
+    rows = []
+    for name, (res, wall) in runs.items():
+        q = res.metrics.qos
+        rows.append(Row(f"fig7_{name}", wall * 1e6, {
+            "qos_mean": float(jnp.mean(q)),
+            "qos_p1": float(jnp.quantile(q, 0.01)),
+            "qos_p10": float(jnp.quantile(q, 0.10)),
+            "violation_frac": float(jnp.mean(q < QOS_TARGET)),
+        }))
+    v_over = float(jnp.mean(runs["oversub"][0].metrics.qos < QOS_TARGET))
+    v_flex = float(jnp.mean(runs["flexF"][0].metrics.qos < QOS_TARGET))
+    rows.append(Row("fig7_flex_vs_oversub", 0.0, {
+        "violations_oversub": v_over, "violations_flex": v_flex,
+        "violation_ratio": min(v_over / max(v_flex, 1e-6), 999.0)}))
+    return rows

@@ -1,0 +1,27 @@
+"""Fig. 8: the estimation-penalty controller's reaction to QoS drops.
+
+Run under a stressed regime (noisy estimator) so violations occur; report
+how high P spikes and how quickly QoS recovers above target.
+"""
+import jax.numpy as jnp
+
+from benchmarks.common import QOS_TARGET, Row, figure_runs
+
+
+def run(full: bool):
+    cfg, ts, runs = figure_runs(full, noise=0.5)
+    rows = []
+    for name in ("flexF", "flexL", "oversub"):
+        res, wall = runs[name]
+        q = res.metrics.qos
+        p = res.metrics.penalty
+        viol = q < QOS_TARGET
+        # mean recovery time: slots from a violation to the next ok slot
+        idx = jnp.where(viol, jnp.arange(q.shape[0]), -1)
+        rows.append(Row(f"fig8_{name}", wall * 1e6, {
+            "p_max": float(jnp.max(p)),
+            "p_final": float(p[-1]),
+            "violation_frac": float(jnp.mean(viol)),
+            "qos_min": float(jnp.min(q)),
+        }))
+    return rows

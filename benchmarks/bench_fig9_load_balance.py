@@ -1,0 +1,15 @@
+"""Fig. 9: normalized std of per-node usage (lower = better balance)."""
+from benchmarks.common import Row, figure_runs
+from repro.traces import analysis
+
+
+def run(full: bool):
+    cfg, ts, runs = figure_runs(full)
+    rows = []
+    for name, (res, wall) in runs.items():
+        lb = analysis.load_balance(res)
+        rows.append(Row(f"fig9_{name}", wall * 1e6, {
+            "norm_std_mem": lb["mean_norm_std_mem"],
+            "norm_std_cpu": lb["mean_norm_std_cpu"],
+        }))
+    return rows

@@ -1,0 +1,26 @@
+"""Roofline table from the dry-run artifacts (EXPERIMENTS.md SRoofline)."""
+import glob
+import json
+
+from benchmarks.common import Row
+
+
+def run(full: bool):
+    rows = []
+    for f in sorted(glob.glob("artifacts/dryrun/*__pod16x16.json")):
+        r = json.load(open(f))
+        if not r.get("ok"):
+            rows.append(Row(f"roofline_{r['arch']}_{r['shape']}", 0.0,
+                            {"ok": 0}))
+            continue
+        ro = r["roofline"]
+        rows.append(Row(f"roofline_{r['arch']}_{r['shape']}",
+                        r["compile_s"] * 1e6, {
+            "t_compute_s": ro["t_compute_s"],
+            "t_memory_s": ro["t_memory_s"],
+            "t_collective_s": ro["t_collective_s"],
+            "mfu_upper": ro["mfu_upper_bound"],
+            "useful_ratio": ro["useful_flops_ratio"],
+            "peak_GiB": r["memory"]["peak_bytes_per_device"] / 2**30,
+        }))
+    return rows

@@ -1,0 +1,46 @@
+"""Scheduler decision latency (paper §4.3: O(N/p), sub-second for thousands
+of nodes).  Times the jitted sequential ScheduleOne loop per decision and
+the vectorized filter+score primitive across node-table sizes."""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import Row
+from repro.core import FlexParams, NodeState, SchedulerKind, schedule_queue
+from repro.kernels.flex_score.ref import pick_node_ref
+
+
+def run(full: bool):
+    rows = []
+    params = FlexParams.default()
+    sizes = [1000, 4000, 16000] if not full else [4000, 16000, 64000]
+    Q = 256
+    key = jax.random.PRNGKey(0)
+    for n in sizes:
+        node = NodeState.zeros(n)
+        node = node._replace(est_usage=jax.random.uniform(key, (n, 2)) * 0.5)
+        reqs = jax.random.uniform(key, (Q, 2)) * 0.1
+        srcs = jnp.zeros((Q,), jnp.int32)
+        valid = jnp.ones((Q,), bool)
+        f = jax.jit(lambda nd: schedule_queue(
+            nd, reqs, srcs, valid, jnp.asarray(1.2), params,
+            SchedulerKind.FLEX_F))
+        f(node)[1].block_until_ready()
+        t0 = time.time()
+        iters = 5
+        for _ in range(iters):
+            f(node)[1].block_until_ready()
+        us = (time.time() - t0) / (iters * Q) * 1e6
+        rows.append(Row(f"schedule_one_n{n}", us,
+                        {"nodes": n, "decisions_per_s": 1e6 / us}))
+
+        g = jax.jit(lambda e: pick_node_ref(
+            e, jnp.zeros_like(e), jnp.zeros((n,)), reqs[0], 1.2, 1.0, 0.25))
+        g(node.est_usage)[0].block_until_ready()
+        t0 = time.time()
+        for _ in range(50):
+            g(node.est_usage)[0].block_until_ready()
+        us2 = (time.time() - t0) / 50 * 1e6
+        rows.append(Row(f"filter_score_n{n}", us2, {"nodes": n}))
+    return rows

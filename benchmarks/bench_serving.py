@@ -1,0 +1,43 @@
+"""Flex vs reserve admission in the serving engine (engine-level, stub
+decode): saturating workload, utilization + completion throughput + QoS."""
+import time
+
+import numpy as np
+
+from benchmarks.common import Row
+from repro.serving.engine import (AdmissionPolicy, EngineConfig, Request,
+                                  ServeEngine)
+
+
+def _workload(n, seed=0):
+    rng = np.random.default_rng(seed)
+    out = []
+    for i in range(n):
+        true = int(rng.integers(8, 64))
+        out.append(Request(
+            rid=i, prompt_len=int(rng.integers(16, 64)),
+            max_tokens=int(true * rng.uniform(1.8, 4.0)),
+            true_tokens=true))
+    return out
+
+
+def run(full: bool):
+    n_req = 2000 if full else 400
+    steps = 300 if full else 150
+    rows = []
+    for policy in (AdmissionPolicy.RESERVE, AdmissionPolicy.FLEX):
+        cfg = EngineConfig(n_replicas=8, kv_budget_tokens=1024,
+                           policy=policy, max_active_per_replica=64)
+        eng = ServeEngine(cfg)
+        for r in _workload(n_req):
+            eng.submit(r)
+        t0 = time.time()
+        stats = eng.run(steps)
+        us = (time.time() - t0) / steps * 1e6
+        rows.append(Row(f"serve_{policy.value}", us, {
+            "finished": stats.finished,
+            "mean_util": float(np.mean(stats.util_series)),
+            "qos_final": stats.qos_series[-1],
+            "evictions": stats.evicted_events,
+        }))
+    return rows

@@ -1,0 +1,30 @@
+"""Paper §2.2 (Figures 1-5): trace-statistics twin validation.
+
+Derived values must land near the paper's published numbers: mean usage /
+request ~ 0.45-0.5, offered request ~ 0.9-1.1x capacity, heavy per-class
+peak ratios (system >> 1, production <= 1).
+"""
+import time
+
+from benchmarks.common import Row, figure_runs
+from repro.traces import analysis
+
+
+def run(full: bool):
+    t0 = time.time()
+    cfg, ts, runs = figure_runs(full)
+    res, _ = runs["leastfit"]
+    task = analysis.task_level(ts)
+    cluster = analysis.cluster_level(res)
+    machine = analysis.machine_level(res)
+    us = (time.time() - t0) * 1e6
+    keep = {
+        "mean_usage_over_request_cpu": task["mean_usage_over_request_cpu"],
+        "mean_usage_over_request_mem": task["mean_usage_over_request_mem"],
+        "system_peak_ratio_cpu": task["system_peak_ratio_cpu"],
+        "production_peak_ratio_cpu": task["production_peak_ratio_cpu"],
+        "frac_below_half_cpu": machine["frac_below_half_cpu"],
+        "avg_request_cpu": cluster["avg_request_cpu"],
+        "avg_usage_cpu": cluster["avg_usage_cpu"],
+    }
+    return [Row("trace_analysis", us, keep)]

@@ -1,0 +1,77 @@
+"""Shared benchmark scaffolding.
+
+Every bench module exposes ``run(full: bool) -> list[Row]``; ``run.py``
+collects rows and prints ``name,us_per_call,derived`` CSV lines.
+
+Reduced mode (default) keeps the whole suite a few minutes on CPU; set
+REPRO_FULL=1 for paper-scale (4000 nodes / 24 h / ~700k tasks).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Dict
+
+import jax
+
+from repro.core import FlexParams, SchedulerKind, SimConfig, run as sim_run
+from repro.traces import analysis, generate_calibrated
+
+
+@dataclasses.dataclass
+class Row:
+    name: str
+    us_per_call: float
+    derived: Dict[str, float]
+
+    def csv(self) -> str:
+        d = ";".join(f"{k}={v:.6g}" for k, v in self.derived.items())
+        return f"{self.name},{self.us_per_call:.1f},{d}"
+
+
+def sim_setup(full: bool):
+    if full:
+        cfg = SimConfig(n_nodes=4000, n_slots=288, arrivals_per_slot=4096,
+                        retry_capacity=1024)
+    else:
+        cfg = SimConfig(n_nodes=300, n_slots=96, arrivals_per_slot=1024,
+                        retry_capacity=256)
+    ts = generate_calibrated(0, cfg.n_nodes, cfg.n_slots, offered_load=1.6)
+    return cfg, ts
+
+
+METHODS = {
+    "leastfit": SchedulerKind.LEAST_FIT,
+    "oversub": SchedulerKind.OVERSUB,
+    "flexF": SchedulerKind.FLEX_F,
+    "flexL": SchedulerKind.FLEX_L,
+}
+
+
+@functools.lru_cache(maxsize=4)
+def _cached_runs(full: bool, demand_scale: float = 1.0,
+                 n_nodes: int = 0, noise: float = 0.0):
+    """One simulation per scheduler, shared across figure benches."""
+    cfg, ts = sim_setup(full)
+    if n_nodes:
+        cfg = cfg._replace(n_nodes=n_nodes)
+    if demand_scale != 1.0:
+        cfg = cfg._replace(demand_scale=demand_scale)
+    out = {}
+    for name, kind in METHODS.items():
+        params = FlexParams.default(
+            theta=2.0 if kind == SchedulerKind.OVERSUB else 1.0)
+        t0 = time.time()
+        res = sim_run(ts, cfg, kind, params, est_noise_std=noise)
+        jax.block_until_ready(res.metrics.qos)
+        out[name] = (res, time.time() - t0)
+    return cfg, ts, out
+
+
+def figure_runs(full: bool, **kw):
+    return _cached_runs(full, **kw)
+
+
+QOS_TARGET = 0.99
+summarize = analysis.summarize

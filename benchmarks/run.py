@@ -1,0 +1,52 @@
+"""Benchmark orchestrator — one bench per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  REPRO_FULL=1 switches to
+paper-scale configs (4000 nodes / 288 slots / ~700k tasks).
+"""
+from __future__ import annotations
+
+import os
+import sys
+import time
+import traceback
+
+BENCHES = [
+    "bench_trace_analysis",
+    "bench_fig6_utilization",
+    "bench_fig7_qos",
+    "bench_fig8_penalty",
+    "bench_fig9_load_balance",
+    "bench_fig10_cluster_size",
+    "bench_fig11_demand_scale",
+    "bench_scheduler_throughput",
+    "bench_serving",
+    "bench_roofline",
+]
+
+
+def main() -> None:
+    full = os.environ.get("REPRO_FULL", "0") == "1"
+    only = sys.argv[1:] or None
+    print("name,us_per_call,derived")
+    t_start = time.time()
+    failures = 0
+    for mod_name in BENCHES:
+        if only and mod_name not in only:
+            continue
+        try:
+            mod = __import__(f"benchmarks.{mod_name}",
+                             fromlist=["run"])
+            for row in mod.run(full):
+                print(row.csv(), flush=True)
+        except Exception as e:
+            failures += 1
+            print(f"{mod_name},0,ERROR={type(e).__name__}:{e}", flush=True)
+            traceback.print_exc(limit=4, file=sys.stderr)
+    print(f"# total_wall_s={time.time() - t_start:.1f} failures={failures}",
+          flush=True)
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,30 @@
+"""Load estimators L-hat (paper §4.2, §5.1).
+
+The paper deliberately uses a *simple* estimator — "we monitor and use the
+current resource usage" — and shows Flex's penalty controller compensates
+for its errors.  We provide that estimator plus an EWMA variant (the related
+work's standard choice, e.g. Xiao et al. [32]) and an optional measurement
+noise knob so tests can stress the controller with a *bad* estimator.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def current_usage(node_usage: jnp.ndarray,
+                  key: Optional[jax.Array] = None,
+                  noise_std: float = 0.0) -> jnp.ndarray:
+    """The paper's evaluation estimator: L-hat = measured current usage."""
+    if key is not None and noise_std > 0.0:
+        noise = 1.0 + noise_std * jax.random.normal(key, node_usage.shape)
+        return jnp.maximum(node_usage * noise, 0.0)
+    return node_usage
+
+
+def ewma(prev_est: jnp.ndarray, measurement: jnp.ndarray,
+         decay: float = 0.7) -> jnp.ndarray:
+    """Exponentially-weighted moving average estimator."""
+    return decay * prev_est + (1.0 - decay) * measurement

@@ -1,0 +1,33 @@
+"""Estimation-penalty feedback controller (paper §4.2, Alg. 3 lines 19-25).
+
+The controller treats the penalty P like a congestion window:
+  * QoS healthy (Q(t) >= rho)           -> multiplicative decrease P = max(alpha*P, P_min)
+  * QoS violated and still degrading    -> fast back-off        P = P + beta*(P - 1)
+
+P multiplies the load estimate in the Flex capacity filter
+``P * L_hat_i + r_j <= C`` — larger P means more conservative admission.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.types import ControllerState, FlexParams
+
+
+def update_penalty(state: ControllerState, qos: jnp.ndarray,
+                   params: FlexParams) -> ControllerState:
+    """One PeriodicEstimationPenaltyUpdate step (Alg. 3)."""
+    qos = jnp.asarray(qos, jnp.float32)
+    p = state.penalty
+
+    healthy = qos >= params.qos_target
+    degrading = jnp.logical_and(qos < params.qos_target, qos < state.prev_qos)
+
+    p_decrease = jnp.maximum(p * params.alpha, params.p_min)
+    p_increase = p + params.beta * (p - 1.0)
+
+    new_p = jnp.where(healthy, p_decrease, jnp.where(degrading, p_increase, p))
+    # Clamp to [P_min, P_max]: below P_min under-estimation is unchecked;
+    # above ~C/min-usage the penalty is inert, so cap it for numeric sanity.
+    new_p = jnp.clip(new_p, params.p_min, params.p_max)
+    return ControllerState(penalty=new_p, prev_qos=qos)

@@ -1,0 +1,31 @@
+"""Quality of service metrics (paper §3 eq. 14 and §5.1).
+
+The evaluation QoS is: q_j(t) = 1 iff the task got at least what it asked
+for OR at least what it needed, i.e. a_j >= d_j or a_j >= r_j — equivalently
+a_j >= min(d_j, r_j) — on EVERY resource dimension.  Cluster QoS Q(t) is the
+fraction of active tasks with q_j = 1.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+_EPS = 1e-6
+
+
+def task_qos(alloc: jnp.ndarray, demand: jnp.ndarray,
+             request: jnp.ndarray) -> jnp.ndarray:
+    """q_j(t) in {0,1}; shape (T,) bool given (T, R) inputs."""
+    need = jnp.minimum(demand, request)
+    return jnp.all(alloc + _EPS >= need, axis=-1)
+
+
+def cluster_qos(q: jnp.ndarray, active: jnp.ndarray) -> jnp.ndarray:
+    """Q(t) = mean of q_j over active tasks (1.0 when the cluster is idle)."""
+    n = jnp.sum(active)
+    ok = jnp.sum(jnp.logical_and(q, active))
+    return jnp.where(n > 0, ok / jnp.maximum(n, 1), 1.0).astype(jnp.float32)
+
+
+def violation_fraction(qos_series: jnp.ndarray, target: float) -> jnp.ndarray:
+    """Fraction of time slots where Q(t) < rho (paper Fig. 7b)."""
+    return jnp.mean((qos_series < target).astype(jnp.float32))

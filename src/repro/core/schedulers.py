@@ -1,0 +1,148 @@
+"""Placement policies (paper §4, Algorithms 1-3) as vectorized JAX programs.
+
+The paper's ``ScheduleOne`` is: filter nodes by the capacity constraint,
+score the survivors, place on the argmax.  Filtering + scoring over all N
+nodes is embarrassingly parallel — the paper parallelizes it over p CPU
+threads (complexity O(N/p)); here it is a single fused VPU program (and a
+Pallas kernel in ``repro.kernels.flex_score`` for the TPU hot path).
+
+Sequential semantics are preserved exactly: tasks are placed one at a time
+via ``lax.scan`` and every decision sees the previous placement's
+reservation, as in Kubernetes.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import (
+    FlexParams,
+    NodeState,
+    SchedulerKind,
+)
+
+_NEG_INF = -1e30
+
+
+def node_scores(
+    node: NodeState,
+    r_task: jnp.ndarray,        # (R,) request of the task being placed
+    src_bucket: jnp.ndarray,    # () i32
+    penalty: jnp.ndarray,       # () f32
+    params: FlexParams,
+    kind: SchedulerKind,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Filter + score all nodes for one task.
+
+    Returns (scores (N,), feasible (N,) bool).  Infeasible nodes get -inf.
+    """
+    if kind in (SchedulerKind.LEAST_FIT, SchedulerKind.OVERSUB):
+        # Request-based: R_i + r_j <= theta * C    (RLB feasibility, eq. 4-5)
+        committed = node.requested + node.reserved            # (N, R)
+        feasible = jnp.all(committed + r_task <= params.theta, axis=-1)
+        # LeastFit: prefer the node with the least requested resource.
+        score = -jnp.max(committed / params.theta, axis=-1)
+    else:
+        # Usage-based (ULB, eq. 9): P * L_hat_i + reserved + r_j <= C.
+        load = penalty * node.est_usage + node.reserved        # (N, R)
+        feasible = jnp.all(load + r_task <= 1.0, axis=-1)
+        # Score (Alg. 3 line 9): prefer low load and few same-source tasks
+        # (same-source tasks are likely to peak together, §4.3).
+        load_term = jnp.max(load, axis=-1)                     # dominant resource
+        src_frac = node.src_count[:, src_bucket].astype(jnp.float32) / (
+            jnp.maximum(node.n_tasks, 1).astype(jnp.float32))
+        score = -(params.w_load * load_term + params.w_src * src_frac)
+    return jnp.where(feasible, score, _NEG_INF), feasible
+
+
+def place_task(
+    node: NodeState,
+    r_task: jnp.ndarray,
+    src_bucket: jnp.ndarray,
+    valid: jnp.ndarray,         # () bool — False => no-op (padding entry)
+    penalty: jnp.ndarray,
+    params: FlexParams,
+    kind: SchedulerKind,
+) -> Tuple[NodeState, jnp.ndarray]:
+    """ScheduleOne (Alg. 3): returns (new_state, node_idx); idx = -1 on failure.
+
+    All state updates are O(1) scatters so that a long ``lax.scan`` over a
+    task queue stays cheap (the O(N) part is the filter/score reduction,
+    which IS the algorithm).
+    """
+    scores, feasible = node_scores(node, r_task, src_bucket, penalty, params, kind)
+    ok = jnp.logical_and(jnp.any(feasible), valid)
+    idx = jnp.where(ok, jnp.argmax(scores).astype(jnp.int32), -1)
+
+    i = jnp.maximum(idx, 0)
+    okf = ok.astype(jnp.float32)
+    oki = ok.astype(jnp.int32)
+    new_node = NodeState(
+        est_usage=node.est_usage,
+        reserved=node.reserved.at[i].add(okf * r_task),
+        requested=node.requested.at[i].add(okf * r_task),
+        n_tasks=node.n_tasks.at[i].add(oki),
+        src_count=node.src_count.at[i, src_bucket].add(oki),
+    )
+    return new_node, idx
+
+
+def schedule_queue(
+    node: NodeState,
+    requests: jnp.ndarray,     # (Q, R) padded task requests
+    src_buckets: jnp.ndarray,  # (Q,) i32
+    valid: jnp.ndarray,        # (Q,) bool — False for padding entries
+    penalty: jnp.ndarray,
+    params: FlexParams,
+    kind: SchedulerKind,
+) -> Tuple[NodeState, jnp.ndarray]:
+    """Place a queue of tasks sequentially.  Returns (state, placements (Q,))."""
+
+    def step(ns, xs):
+        r, src, ok = xs
+        return place_task(ns, r, src, ok, penalty, params, kind)
+
+    node, placements = jax.lax.scan(step, node, (requests, src_buckets, valid))
+    return node, placements
+
+
+# ---------------------------------------------------------------------------
+# Phase-1 algorithms with precise load estimation (paper §4.1).
+# Single-resource, standalone — used by the approximation-bound property
+# tests (Theorems 4.1 and 4.2) and as reference semantics.
+# ---------------------------------------------------------------------------
+
+def fifo_scheduler(loads: jnp.ndarray, requests: jnp.ndarray,
+                   capacity: float = jnp.inf) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Algorithm 1: visit tasks FIFO, put each on the least-loaded node.
+
+    Args:
+      loads: (N,) initial node loads.
+      requests: (J,) task sizes (request == demand in the precise phase).
+      capacity: per-node capacity C (inf for the theorem setting).
+
+    Returns (final_loads (N,), assignment (J,) node idx or -1).
+    """
+
+    def step(l, r):
+        i = jnp.argmin(l)
+        fits = l[i] + r <= capacity
+        l = jnp.where(fits, l.at[i].add(r), l)
+        return l, jnp.where(fits, i, -1).astype(jnp.int32)
+
+    return jax.lax.scan(step, loads, requests)
+
+
+def lrf_scheduler(loads: jnp.ndarray, requests: jnp.ndarray,
+                  capacity: float = jnp.inf) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Algorithm 2: sort by request descending, then FIFO placement.
+
+    Returns (final_loads, assignment in the ORIGINAL task order).
+    """
+    order = jnp.argsort(-requests)
+    loads, assign_sorted = fifo_scheduler(loads, requests[order], capacity)
+    inv = jnp.zeros_like(order).at[order].set(
+        jnp.arange(order.shape[0], dtype=order.dtype))
+    return loads, assign_sorted[inv]

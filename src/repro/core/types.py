@@ -1,0 +1,159 @@
+"""Core pytree types for the Flex resource manager.
+
+All resource quantities are normalized to a single node's capacity
+(C = 1.0 per resource).  Resources are indexed [CPU, MEM] (R = 2) but every
+function is written generically over the trailing resource axis.
+"""
+from __future__ import annotations
+
+import enum
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+# Resource axis indices.
+CPU = 0
+MEM = 1
+NUM_RESOURCES = 2
+
+# Priority classes (mirrors the Google-trace classification in the paper §2.2).
+CLASS_BATCH = 0
+CLASS_PRODUCTION = 1
+CLASS_SYSTEM = 2
+NUM_CLASSES = 3
+
+# Number of hash buckets for task "sources" (users/jobs).  The Flex scoring
+# rule prefers nodes with fewer tasks from the same source (§4.3).
+NUM_SRC_BUCKETS = 64
+
+
+class SchedulerKind(enum.IntEnum):
+    """Which placement policy the simulator / engine runs."""
+
+    LEAST_FIT = 0   # request-based, theta = 1       (paper baseline "LeastFit")
+    OVERSUB = 1     # request-based, theta = 2       (paper baseline "Oversub")
+    FLEX_F = 2      # usage-based, FIFO queue        (paper "FlexF")
+    FLEX_L = 3      # usage-based, LRF priority queue (paper "FlexL")
+
+
+class FlexParams(NamedTuple):
+    """Static algorithm parameters (Table 1 + §5.1 defaults)."""
+
+    qos_target: jnp.ndarray    # rho, cluster QoS target (paper: 0.99)
+    alpha: jnp.ndarray         # multiplicative decrease constant (paper: 0.99)
+    beta: jnp.ndarray          # additive-increase constant (paper: 1.0)
+    p_init: jnp.ndarray        # initial estimation penalty (paper: 1.5)
+    p_min: jnp.ndarray         # lower bound for P (paper: 1.0)
+    p_max: jnp.ndarray         # upper clamp for P (beyond C/min-usage P is inert)
+    theta: jnp.ndarray         # oversubscription factor for request feasibility
+    w_load: jnp.ndarray        # scoring weight: prefer low load
+    w_src: jnp.ndarray         # scoring weight: prefer few same-source tasks
+
+    @staticmethod
+    def default(
+        qos_target: float = 0.99,
+        alpha: float = 0.99,
+        beta: float = 1.0,
+        p_init: float = 1.5,
+        p_min: float = 1.0,
+        p_max: float = 16.0,
+        theta: float = 1.0,
+        w_load: float = 1.0,
+        w_src: float = 0.25,
+    ) -> "FlexParams":
+        f = lambda x: jnp.asarray(x, jnp.float32)
+        return FlexParams(
+            qos_target=f(qos_target), alpha=f(alpha), beta=f(beta),
+            p_init=f(p_init), p_min=f(p_min), p_max=f(p_max), theta=f(theta),
+            w_load=f(w_load), w_src=f(w_src),
+        )
+
+
+class NodeState(NamedTuple):
+    """Per-node cluster state (all shapes lead with N = num nodes)."""
+
+    est_usage: jnp.ndarray   # (N, R) f32 — estimated load L-hat (from estimator)
+    reserved: jnp.ndarray    # (N, R) f32 — requests reserved since last estimate refresh
+    requested: jnp.ndarray   # (N, R) f32 — sum of requests of running tasks (R_i)
+    n_tasks: jnp.ndarray     # (N,)   i32 — running task count
+    src_count: jnp.ndarray   # (N, NUM_SRC_BUCKETS) i32 — running tasks per source bucket
+
+    @staticmethod
+    def zeros(n_nodes: int) -> "NodeState":
+        return NodeState(
+            est_usage=jnp.zeros((n_nodes, NUM_RESOURCES), jnp.float32),
+            reserved=jnp.zeros((n_nodes, NUM_RESOURCES), jnp.float32),
+            requested=jnp.zeros((n_nodes, NUM_RESOURCES), jnp.float32),
+            n_tasks=jnp.zeros((n_nodes,), jnp.int32),
+            src_count=jnp.zeros((n_nodes, NUM_SRC_BUCKETS), jnp.int32),
+        )
+
+
+class ControllerState(NamedTuple):
+    """State of the estimation-penalty feedback controller (Alg. 3)."""
+
+    penalty: jnp.ndarray   # () f32 — current P
+    prev_qos: jnp.ndarray  # () f32 — Q(t-1)
+
+    @staticmethod
+    def init(params: FlexParams) -> "ControllerState":
+        return ControllerState(
+            penalty=jnp.asarray(params.p_init, jnp.float32),
+            prev_qos=jnp.asarray(1.0, jnp.float32),
+        )
+
+
+class TaskSet(NamedTuple):
+    """A workload trace: struct-of-arrays over T tasks.
+
+    Usage at slot t for task j is materialized lazily:
+      usage[j, t] = clip(mean[j] + std[j] * eps(j, t), 0, peak[j])
+    where eps is a counter-based standard normal (no storage).
+    """
+
+    arrival: jnp.ndarray    # (T,) i32 — arrival slot
+    duration: jnp.ndarray   # (T,) i32 — lifetime in slots (>= 1)
+    request: jnp.ndarray    # (T, R) f32 — requested resources r_j
+    mean_usage: jnp.ndarray  # (T, R) f32 — mean of the demand process
+    std_usage: jnp.ndarray   # (T, R) f32 — std of the demand process
+    peak_usage: jnp.ndarray  # (T, R) f32 — clip ceiling for demand
+    ar_rho: jnp.ndarray     # (T,) f32 — AR(1) temporal correlation of demand
+    priority: jnp.ndarray   # (T,) i32 — CLASS_*
+    src: jnp.ndarray        # (T,) i32 — source bucket in [0, NUM_SRC_BUCKETS)
+
+    @property
+    def num_tasks(self) -> int:
+        return self.arrival.shape[0]
+
+
+class SimConfig(NamedTuple):
+    """Static simulation configuration (§5.1)."""
+
+    n_nodes: int = 4000
+    n_slots: int = 288           # 24 h at 5-minute slots (trace sampling period)
+    arrivals_per_slot: int = 4096  # static arrival-buffer width
+    retry_capacity: int = 1024     # static retry-queue width
+    wfs_iters: int = 4             # progressive-filling iterations for WFS
+    demand_scale: float = 1.0      # §5.6 sensitivity knob (scales demand, not request)
+
+
+class SlotMetrics(NamedTuple):
+    """Per-slot time series emitted by the simulator (leading axis n_slots)."""
+
+    usage: jnp.ndarray        # (S, R) cluster total usage / capacity
+    requested: jnp.ndarray    # (S, R) cluster total admitted requests / capacity
+    qos: jnp.ndarray          # (S,) Q(t)
+    penalty: jnp.ndarray      # (S,) P
+    usage_std: jnp.ndarray    # (S, R) std of per-node usage (load-balance metric)
+    usage_mean: jnp.ndarray   # (S, R) mean of per-node usage
+    n_running: jnp.ndarray    # (S,) running tasks
+    n_rejected: jnp.ndarray   # (S,) cumulative rejected tasks
+    node_usage: jnp.ndarray   # (S, N, R) per-node usage (machine-level analysis)
+
+
+class SimResult(NamedTuple):
+    metrics: SlotMetrics
+    placement: jnp.ndarray      # (T,) i32 — node index or -1 (never admitted)
+    admit_slot: jnp.ndarray     # (T,) i32 — slot the task was admitted, or -1
+    qos_ok_slots: jnp.ndarray   # (T,) i32 — #slots the task met its QoS
+    active_slots: jnp.ndarray   # (T,) i32 — #slots the task was running

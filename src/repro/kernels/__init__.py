@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+Each kernel package ships three modules:
+  <name>.py — the pl.pallas_call with explicit BlockSpec VMEM tiling
+  ops.py    — jit'd public wrapper (backend dispatch, shape guards)
+  ref.py    — pure-jnp oracle used by the allclose test sweeps
+
+This container is CPU-only: kernels target TPU and are VALIDATED with
+``interpret=True`` (the kernel body runs in Python on CPU).
+"""

@@ -1,0 +1,127 @@
+"""Blocked flash attention for TPU (pl.pallas_call + explicit BlockSpecs).
+
+Layout: q (B, H, Sq, hd); k, v (B, KV, Sk, hd), GQA group G = H // KV.
+Grid = (B, H, nq, nk) — the trailing kv-block axis is sequential on TPU, so
+the online-softmax running statistics (m, l, acc) live in VMEM scratch and
+persist across kv blocks of a (b, h, iq) cell.  Block shapes are
+(block_q, hd) / (block_k, hd): hd is 64/80/112/128 across our archs, so the
+MXU operand tiles are (block_q x hd)·(hd x block_k) with hd the contraction
+dim — block_q/block_k default to 256/512, multiples of the 128 MXU edge.
+
+Causal/sliding-window blocks that are fully masked are skipped with
+``pl.when`` (no MXU work issued).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale: float, causal: bool, window: int, nk: int,
+            block_q: int, block_k: int):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, _NEG)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = iq * block_q
+    k_start = ik * block_k
+
+    # A block is live unless fully above the diagonal / outside the window.
+    live = jnp.asarray(True)
+    if causal:
+        live = k_start <= q_start + block_q - 1
+    if window > 0:
+        live = jnp.logical_and(live,
+                               k_start + block_k - 1 > q_start - window)
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale          # (bq, hd)
+        k = k_ref[0, 0].astype(jnp.float32)                  # (bk, hd)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)              # (bq, bk)
+
+        if causal or window > 0:
+            rows = q_start + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 0)
+            cols = k_start + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 1)
+            mask = jnp.ones((block_q, block_k), bool)
+            if causal:
+                mask &= cols <= rows
+            if window > 0:
+                mask &= cols > rows - window
+            s = jnp.where(mask, s, _NEG)
+
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=-1)
+        v = v_ref[0, 0].astype(jnp.float32)                  # (bk, hd)
+        pv = jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        acc_scr[...] = acc_scr[...] * corr[:, None] + pv
+        m_scr[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "block_q", "block_k", "interpret"))
+def flash_attention_bhsd(q, k, v, *, causal=True, window=0,
+                         block_q=256, block_k=512, interpret=False):
+    """q: (B, H, Sq, hd); k, v: (B, KV, Sk, hd) -> (B, H, Sq, hd)."""
+    B, H, Sq, hd = q.shape
+    KV, Sk = k.shape[1], k.shape[2]
+    G = H // KV
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Sk)
+    assert Sq % block_q == 0 and Sk % block_k == 0
+    nq, nk = Sq // block_q, Sk // block_k
+    scale = 1.0 / math.sqrt(hd)
+
+    grid = (B, H, nq, nk)
+    kernel = functools.partial(
+        _kernel, scale=scale, causal=causal, window=window, nk=nk,
+        block_q=block_q, block_k=block_k)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, hd),
+                         lambda b, h, iq, ik: (b, h, iq, 0)),
+            pl.BlockSpec((1, 1, block_k, hd),
+                         lambda b, h, iq, ik, G=G: (b, h // G, ik, 0)),
+            pl.BlockSpec((1, 1, block_k, hd),
+                         lambda b, h, iq, ik, G=G: (b, h // G, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, hd),
+                               lambda b, h, iq, ik: (b, h, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

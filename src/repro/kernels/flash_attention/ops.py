@@ -1,0 +1,33 @@
+"""Public wrapper for the flash attention kernel.
+
+Dispatch: Pallas on TPU, interpret-mode Pallas when explicitly requested
+(tests), jnp reference otherwise.  Layout adapters accept the model-native
+(B, S, H, hd) arrangement.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.flash_attention.flash_attention import flash_attention_bhsd
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+def _use_pallas(interpret: bool) -> bool:
+    return interpret or jax.default_backend() == "tpu"
+
+
+def flash_attention(q, k, v, *, causal=True, window=0, block_q=256,
+                    block_k=512, interpret=False):
+    """q: (B, S, H, hd); k, v: (B, Sk, KV, hd) -> (B, S, H, hd)."""
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    Sq, Sk = qt.shape[2], kt.shape[2]
+    divisible = Sq % min(block_q, Sq) == 0 and Sk % min(block_k, Sk) == 0
+    if _use_pallas(interpret) and divisible:
+        o = flash_attention_bhsd(qt, kt, vt, causal=causal, window=window,
+                                 block_q=block_q, block_k=block_k,
+                                 interpret=interpret)
+    else:
+        o = attention_ref(qt, kt, vt, causal=causal, window=window)
+    return o.transpose(0, 2, 1, 3)

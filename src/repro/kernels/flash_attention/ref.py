@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for the flash attention kernel (GQA + causal + SWA)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_NEG = -1e30
+
+
+def attention_ref(q, k, v, *, causal=True, window=0):
+    """q: (B, H, Sq, hd); k, v: (B, KV, Sk, hd) -> (B, H, Sq, hd)."""
+    B, H, Sq, hd = q.shape
+    KV, Sk = k.shape[1], k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, KV, G, Sq, hd).astype(jnp.float32) * (hd ** -0.5)
+    kf = k.astype(jnp.float32)
+    s = jnp.einsum("bkgqd,bksd->bkgqs", qg, kf)
+    pos_q = jnp.arange(Sq)[:, None]
+    pos_k = jnp.arange(Sk)[None, :]
+    m = jnp.ones((Sq, Sk), bool)
+    if causal:
+        m &= pos_k <= pos_q
+    if window > 0:
+        m &= pos_k > pos_q - window
+    s = jnp.where(m, s, _NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bksd->bkgqd", p, v.astype(jnp.float32))
+    return o.reshape(B, H, Sq, hd).astype(q.dtype)

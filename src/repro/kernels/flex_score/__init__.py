@@ -1,0 +1,1 @@
+from repro.kernels.flex_score.ops import flex_pick_node  # noqa: F401

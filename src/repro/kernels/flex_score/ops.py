@@ -1,0 +1,32 @@
+"""Public wrapper: one Flex placement decision over the node table."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flex_score.flex_score import flex_score_tiles
+from repro.kernels.flex_score.ref import pick_node_ref
+
+_NEG = -1e30
+
+
+def flex_pick_node(est, reserved, src_frac, r_task, penalty, *,
+                   w_load=1.0, w_src=0.25, tile=512, interpret=False):
+    """Returns (node_idx or -1, best_score, any_feasible)."""
+    N = est.shape[0]
+    use_pallas = interpret or jax.default_backend() == "tpu"
+    tile = min(tile, N)
+    if not use_pallas or N % tile:
+        return pick_node_ref(est, reserved, src_frac, r_task, penalty,
+                             w_load, w_src)
+    task_vec = jnp.concatenate(
+        [jnp.asarray(r_task, jnp.float32).reshape(-1),
+         jnp.asarray(penalty, jnp.float32).reshape(1)]).reshape(1, -1)
+    tmax, tidx = flex_score_tiles(est, reserved,
+                                  src_frac.reshape(-1, 1).astype(jnp.float32),
+                                  task_vec, tile=tile, w_load=w_load,
+                                  w_src=w_src, interpret=interpret)
+    t = jnp.argmax(tmax)
+    best = tmax[t]
+    idx = jnp.where(best > _NEG / 2, tidx[t], -1).astype(jnp.int32)
+    return idx, best, best > _NEG / 2

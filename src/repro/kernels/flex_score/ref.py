@@ -1,0 +1,20 @@
+"""Oracle for the Flex filter+score step (Alg. 3 ScheduleOne, vectorized)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+_NEG = -1e30
+
+
+def pick_node_ref(est, reserved, src_frac, r_task, penalty, w_load, w_src):
+    """est/reserved: (N, R); src_frac: (N,); r_task: (R,).
+
+    Returns (best_idx or -1, best_score, any_feasible).
+    """
+    load = penalty * est + reserved                       # (N, R)
+    feasible = jnp.all(load + r_task <= 1.0, axis=-1)     # (N,)
+    score = -(w_load * jnp.max(load, axis=-1) + w_src * src_frac)
+    score = jnp.where(feasible, score, _NEG)
+    any_feasible = jnp.any(feasible)
+    idx = jnp.where(any_feasible, jnp.argmax(score), -1).astype(jnp.int32)
+    return idx, jnp.max(score), any_feasible

@@ -1,0 +1,33 @@
+"""Public wrapper: model-layout SSD scan -> chunked Pallas kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd_scan.ref import ssd_ref
+from repro.kernels.ssd_scan.ssd_scan import ssd_scan_chunked
+
+
+def ssd_scan(x, B, C, dt, A_log, chunk: int = 256, *, interpret=False):
+    """Same contract as repro.models.ssm.ssd_chunked (y only).
+
+    x: (Bt, S, H, P); B, C: (Bt, S, N); dt: (Bt, S, H) post-softplus.
+    """
+    Bt, S, H, P = x.shape
+    N = B.shape[-1]
+    Q = min(chunk, S)
+    use_pallas = interpret or jax.default_backend() == "tpu"
+    if not use_pallas or S % Q:
+        y, _ = ssd_ref(x, B, C, dt, A_log)
+        return y.astype(x.dtype)
+    nc = S // Q
+    A = -jnp.exp(A_log.astype(jnp.float32))
+    a = (dt * A).reshape(Bt, nc, Q, H)
+    y = ssd_scan_chunked(
+        x.reshape(Bt, nc, Q, H, P),
+        B.reshape(Bt, nc, Q, N),
+        C.reshape(Bt, nc, Q, N),
+        a,
+        dt.reshape(Bt, nc, Q, H),
+        interpret=interpret)
+    return y.reshape(Bt, S, H, P)

@@ -1,0 +1,35 @@
+"""Oracle for the SSD scan kernel: the naive O(S^2)-free sequential
+recurrence  h_t = exp(dt_t * A) h_{t-1} + dt_t * B_t (x) x_t ;  y_t = C_t h_t.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(x, B, C, dt, A_log):
+    """x: (Bt, S, H, P); B, C: (Bt, S, N); dt: (Bt, S, H) post-softplus.
+
+    Returns (y (Bt, S, H, P), final_state (Bt, H, P, N)).
+    """
+    Bt, S, H, P = x.shape
+    N = B.shape[-1]
+    A = -jnp.exp(A_log.astype(jnp.float32))
+
+    def step(h, inp):
+        xt, bt, ct, dtt = inp            # (Bt,H,P), (Bt,N), (Bt,N), (Bt,H)
+        decay = jnp.exp(dtt * A)         # (Bt, H)
+        dBx = (dtt[..., None, None] * bt[:, None, None, :]
+               * xt[..., None])          # (Bt,H,P,N)
+        h = decay[..., None, None] * h + dBx
+        y = jnp.einsum("bn,bhpn->bhp", ct, h)
+        return h, y
+
+    init = jnp.zeros((Bt, H, P, N), jnp.float32)
+    final, ys = jax.lax.scan(
+        step, init,
+        (x.swapaxes(0, 1).astype(jnp.float32),
+         B.swapaxes(0, 1).astype(jnp.float32),
+         C.swapaxes(0, 1).astype(jnp.float32),
+         dt.swapaxes(0, 1).astype(jnp.float32)))
+    return ys.swapaxes(0, 1), final

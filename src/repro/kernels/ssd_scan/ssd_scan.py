@@ -1,0 +1,92 @@
+"""Chunked SSD (Mamba2 state-space duality) scan as a Pallas TPU kernel.
+
+Grid = (B, H, n_chunks); the chunk axis is last and therefore sequential on
+TPU, so the inter-chunk SSM state (P x N) lives in VMEM scratch and is
+carried across chunk steps of each (b, h) cell — the Pallas analogue of the
+``lax.scan`` in the jnp implementation, but with the whole chunk-local dual
+form (two (Q x Q) x (Q x {P,N}) matmuls) staged through the MXU from VMEM.
+
+Inputs are pre-chunked on the host side:
+  x  (B, nc, Q, H, P)   per-head inputs
+  Bm (B, nc, Q, N)      input projections  (shared across heads, n_groups=1)
+  Cm (B, nc, Q, N)      output projections
+  a  (B, nc, Q, H)      log-decay dt*A  (negative)
+  dt (B, nc, Q, H)      step sizes (post-softplus)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, b_ref, c_ref, a_ref, dt_ref, y_ref, state_scr, *,
+            chunk: int):
+    c_idx = pl.program_id(2)
+
+    @pl.when(c_idx == 0)
+    def _init():
+        state_scr[...] = jnp.zeros_like(state_scr)
+
+    xq = x_ref[0, 0, :, 0, :].astype(jnp.float32)      # (Q, P)
+    bq = b_ref[0, 0].astype(jnp.float32)               # (Q, N)
+    cq = c_ref[0, 0].astype(jnp.float32)               # (Q, N)
+    aq = a_ref[0, 0, :, 0].astype(jnp.float32)         # (Q,)
+    dq = dt_ref[0, 0, :, 0].astype(jnp.float32)        # (Q,)
+
+    a_cum = jnp.cumsum(aq)                             # (Q,)
+    # intra-chunk quadratic (dual) form
+    cb = jax.lax.dot_general(cq, bq, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (Q, Q)
+    seg = a_cum[:, None] - a_cum[None, :]
+    rows = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    # mask before exp: above-diagonal seg is large-positive (overflow)
+    decay = jnp.exp(jnp.where(rows >= cols, seg, -1e30))
+    scores = cb * decay * dq[None, :]
+    y_intra = jax.lax.dot_general(scores, xq, (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+
+    # inter-chunk contribution from the carried state (state: (P, N))
+    state = state_scr[...]
+    y_inter = jnp.exp(a_cum)[:, None] * jax.lax.dot_general(
+        cq, state, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)            # (Q, P)
+
+    # state update
+    tail = jnp.exp(a_cum[-1] - a_cum)                  # (Q,)
+    dB = (tail * dq)[:, None] * bq                     # (Q, N)
+    state_scr[...] = (jnp.exp(a_cum[-1]) * state
+                      + jax.lax.dot_general(
+                          xq, dB, (((0,), (0,)), ((), ())),
+                          preferred_element_type=jnp.float32))
+
+    y_ref[0, 0, :, 0, :] = (y_intra + y_inter).astype(y_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ssd_scan_chunked(x, Bm, Cm, a, dt, *, interpret=False):
+    """x: (B, nc, Q, H, P); Bm/Cm: (B, nc, Q, N); a/dt: (B, nc, Q, H)."""
+    B, nc, Q, H, P = x.shape
+    N = Bm.shape[-1]
+    grid = (B, H, nc)
+    kernel = functools.partial(_kernel, chunk=Q)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, Q, 1, P), lambda b, h, c: (b, c, 0, h, 0)),
+            pl.BlockSpec((1, 1, Q, N), lambda b, h, c: (b, c, 0, 0)),
+            pl.BlockSpec((1, 1, Q, N), lambda b, h, c: (b, c, 0, 0)),
+            pl.BlockSpec((1, 1, Q, 1), lambda b, h, c: (b, c, 0, h)),
+            pl.BlockSpec((1, 1, Q, 1), lambda b, h, c: (b, c, 0, h)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, Q, 1, P),
+                               lambda b, h, c: (b, c, 0, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, nc, Q, H, P), x.dtype),
+        scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
+        interpret=interpret,
+    )(x, Bm, Cm, a, dt)

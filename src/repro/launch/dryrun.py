@@ -1,0 +1,130 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("REPRO_DRYRUN_XLA_FLAGS")
+                           or "--xla_force_host_platform_device_count=512")
+"""Multi-pod dry-run: AOT lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST run before any jax import: jax locks the device
+count at first init, and the production meshes need 512 host placeholder
+devices.  (REPRO_DRYRUN_XLA_FLAGS exists so the CI-scale subprocess test can
+shrink the device count; production runs never set it.)
+
+Usage:
+  python -m repro.launch.dryrun                     # full sweep, both meshes
+  python -m repro.launch.dryrun --arch mixtral-8x7b --shape train_4k
+  python -m repro.launch.dryrun --multi-pod-only / --single-pod-only
+"""
+import argparse      # noqa: E402
+import json          # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+from pathlib import Path  # noqa: E402
+
+import jax           # noqa: E402
+
+from repro.configs import ARCH_IDS, applicable_shapes, get_config  # noqa: E402
+from repro.launch import roofline  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.specs import build_cell, model_flops  # noqa: E402
+
+
+def run_cell(cfg, shape, mesh, mesh_name: str, out_dir: Path,
+             accum=None, save_hlo: bool = False) -> dict:
+    cell_id = f"{cfg.name}__{shape.name}__{mesh_name}"
+    rec = {"arch": cfg.name, "shape": shape.name, "mesh": mesh_name,
+           "kind": shape.kind, "n_chips": mesh.size, "ok": False}
+    try:
+        t0 = time.time()
+        fn, args, meta = build_cell(cfg, shape, mesh, accum=accum)
+        rec.update(meta)
+        lowered = fn.lower(*args)
+        rec["lower_s"] = round(time.time() - t0, 2)
+        t0 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t0, 2)
+
+        ma = compiled.memory_analysis()
+        rec["memory"] = {
+            "argument_bytes": int(ma.argument_size_in_bytes),
+            "output_bytes": int(ma.output_size_in_bytes),
+            "temp_bytes": int(ma.temp_size_in_bytes),
+            "alias_bytes": int(ma.alias_size_in_bytes),
+            "peak_bytes_per_device": int(ma.argument_size_in_bytes
+                                         + ma.temp_size_in_bytes
+                                         + ma.output_size_in_bytes
+                                         - ma.alias_size_in_bytes),
+        }
+        ca = compiled.cost_analysis() or {}
+        rec["xla_cost"] = {k: float(v) for k, v in ca.items()
+                           if isinstance(v, (int, float))
+                           and ("flops" in k or "bytes accessed" in k)}
+
+        hlo = compiled.as_text()
+        an = roofline.analyze(hlo)
+        rec["hlo"] = {k: (v if not isinstance(v, dict) else
+                          {kk: float(vv) for kk, vv in v.items()})
+                      for k, v in an.items()}
+        mf = model_flops(cfg, shape, rec["total_params"],
+                         rec["active_params"])
+        rec["model_flops"] = mf
+        rec["roofline"] = roofline.roofline_terms(
+            an["flops"], an["bytes"], an["collective_bytes"], mf, mesh.size)
+        rec["ok"] = True
+        if save_hlo:
+            (out_dir / f"{cell_id}.hlo.txt").write_text(hlo)
+    except Exception as e:  # record the failure, keep sweeping
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc(limit=12)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    (out_dir / f"{cell_id}.json").write_text(json.dumps(rec, indent=1))
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="single arch id")
+    ap.add_argument("--shape", default=None, help="single shape name")
+    ap.add_argument("--multi-pod-only", action="store_true")
+    ap.add_argument("--single-pod-only", action="store_true")
+    ap.add_argument("--accum", type=int, default=None)
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    args = ap.parse_args()
+
+    out_dir = Path(args.out)
+    meshes = []
+    if not args.multi_pod_only:
+        meshes.append(("pod16x16", make_production_mesh(multi_pod=False)))
+    if not args.single_pod_only:
+        meshes.append(("pods2x16x16", make_production_mesh(multi_pod=True)))
+
+    archs = [args.arch] if args.arch else ARCH_IDS
+    n_ok = n_fail = 0
+    for arch in archs:
+        cfg = get_config(arch)
+        for shape in applicable_shapes(cfg):
+            if args.shape and shape.name != args.shape:
+                continue
+            for mesh_name, mesh in meshes:
+                t0 = time.time()
+                rec = run_cell(cfg, shape, mesh, mesh_name, out_dir,
+                               accum=args.accum, save_hlo=args.save_hlo)
+                status = "OK " if rec["ok"] else "FAIL"
+                n_ok += rec["ok"]
+                n_fail += not rec["ok"]
+                extra = ""
+                if rec["ok"]:
+                    r = rec["roofline"]
+                    extra = (f"bound={r['dominant']:<10} "
+                             f"mfu<={r['mfu_upper_bound']:.3f} "
+                             f"peak={rec['memory']['peak_bytes_per_device']/2**30:.2f}GiB")
+                else:
+                    extra = rec["error"][:120]
+                print(f"[{status}] {arch:24s} {shape.name:12s} {mesh_name:12s} "
+                      f"{time.time()-t0:7.1f}s {extra}", flush=True)
+    print(f"dry-run complete: {n_ok} ok, {n_fail} failed", flush=True)
+    if n_fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,311 @@
+"""Roofline analysis from compiled (SPMD-partitioned, per-device) HLO.
+
+XLA's ``cost_analysis()`` visits a ``while`` body ONCE, so for scan-over-
+layers programs it under-counts by the trip count.  This module re-derives
+the three roofline terms from the optimized HLO text with *trip-count-aware*
+accounting:
+
+  * flops       — 2 * |result| * K for every dot, multiplied through the
+                  call graph (while x known_trip_count, fusions, branches)
+  * bytes       — materialized-buffer traffic: for each op at computation
+                  level, result bytes + operand bytes (fusion internals are
+                  not materialized and excluded)
+  * collectives — result bytes of all-reduce / all-gather / reduce-scatter /
+                  all-to-all / collective-permute (+async -start forms),
+                  likewise trip-count multiplied
+
+Hardware model (TPU v5e): 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import math
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+PEAK_FLOPS = 197e12     # bf16 per chip
+HBM_BW = 819e9          # bytes/s per chip
+ICI_BW = 50e9           # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute", "collective-broadcast", "ragged-all-to-all")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_elems(type_str: str) -> int:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return 0
+    dims = m.group(2)
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n
+
+
+@dataclass
+class _Op:
+    name: str
+    type_str: str
+    opcode: str
+    line: str
+
+
+@dataclass
+class _Computation:
+    name: str
+    params: Dict[str, str] = field(default_factory=dict)  # %param -> type
+    ops: List[_Op] = field(default_factory=list)
+
+
+_COMP_HDR = re.compile(
+    r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\((.*?)\)\s*->\s*(.+?)\s*{\s*$")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(\(.*?\)|[\w\[\]{},:＃ ]+?)\s+"
+    r"([\w\-]+)\(")
+_PARAM_RE = re.compile(r"%?([\w.\-]+):\s*([^,)]+)")
+_WHILE_RE = re.compile(
+    r"body=%?([\w.\-]+)")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
+_BRANCH_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_TF_RE = re.compile(r"(?:true|false)_computation=%?([\w.\-]+)")
+_DOT_CDIMS = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_DOT_BDIMS = re.compile(r"lhs_batch_dims=\{([\d,]*)\}")
+_OPERANDS = re.compile(r"\(([^)]*)\)")
+
+
+def parse_hlo(text: str) -> Tuple[Dict[str, _Computation], Optional[str]]:
+    comps: Dict[str, _Computation] = {}
+    entry = None
+    cur: Optional[_Computation] = None
+    for line in text.splitlines():
+        hdr = _COMP_HDR.match(line)
+        if hdr and "{" in line and "=" not in line.split("(")[0]:
+            cur = _Computation(name=hdr.group(1))
+            for pname, ptype in _PARAM_RE.findall(hdr.group(2)):
+                cur.params[pname] = ptype
+            comps[cur.name] = cur
+            if line.startswith("ENTRY"):
+                entry = cur.name
+            continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        m = _OP_RE.match(line)
+        if m:
+            cur.ops.append(_Op(name=m.group(1), type_str=m.group(2),
+                               opcode=m.group(3), line=line))
+    return comps, entry
+
+
+def _dot_flops(op: _Op, symtab: Dict[str, str]) -> float:
+    result_elems = _shape_elems(op.type_str)
+    # contracted size from lhs shape + contracting dims
+    operands = _OPERANDS.search(op.line.split("=", 1)[1])
+    if not operands:
+        return 0.0
+    first = operands.group(1).split(",")[0].strip().lstrip("%")
+    lhs_type = symtab.get(first, "")
+    m = _SHAPE_RE.search(lhs_type)
+    if not m:
+        return 0.0
+    dims = [int(d) for d in m.group(2).split(",")] if m.group(2) else []
+    cdims = _DOT_CDIMS.search(op.line)
+    k = 1
+    if cdims and cdims.group(1):
+        for i in cdims.group(1).split(","):
+            idx = int(i)
+            if idx < len(dims):
+                k *= dims[idx]
+    return 2.0 * result_elems * k
+
+
+def analyze(text: str) -> Dict[str, float]:
+    comps, entry = parse_hlo(text)
+    if entry is None:
+        return {"flops": 0.0, "bytes": 0.0, "collective_bytes": 0.0,
+                "collectives": {}}
+
+    # per-computation symbol tables (op name -> result type)
+    symtabs: Dict[str, Dict[str, str]] = {}
+    for cname, comp in comps.items():
+        st = dict(comp.params)
+        for op in comp.ops:
+            st[op.name] = op.type_str
+        symtabs[cname] = st
+
+    memo_flops: Dict[str, float] = {}
+    memo_coll: Dict[str, Dict[str, float]] = {}
+    memo_bytes: Dict[str, float] = {}
+
+    # Plumbing ops that do not move bytes through HBM: tuple shuffling,
+    # aliasing views, control flow shells (their bodies are visited
+    # separately), and metadata ops.  "convert" is excluded because the CPU
+    # backend emulates bf16 dots by materializing f32 copies of whole weight
+    # and cache stacks — ops that simply do not exist in the TPU lowering
+    # this roofline models (see EXPERIMENTS.md §Perf, decode iteration 1).
+    _NO_TRAFFIC = {
+        "tuple", "get-tuple-element", "parameter", "constant", "bitcast",
+        "while", "conditional", "call", "after-all", "partition-id",
+        "replica-id", "rng-get-and-update-state", "convert",
+        "opt-barrier", "broadcast", "iota", "get-dimension-size",
+    }
+
+    def _dus_update_bytes(comp_name: str) -> Optional[int]:
+        """Update-operand bytes if computation is a DUS-rooted fusion body."""
+        comp = comps.get(comp_name)
+        if comp is None:
+            return None
+        st = symtabs[comp_name]
+        for op in comp.ops:
+            if op.opcode == "dynamic-update-slice":
+                operands = _OPERANDS.search(op.line.split("=", 1)[1])
+                if operands:
+                    toks = [t.strip().lstrip("%")
+                            for t in operands.group(1).split(",")]
+                    if len(toks) >= 2 and toks[1] in st:
+                        return _shape_bytes(st[toks[1]])
+        return None
+
+    def visit(cname: str, stack=()) -> Tuple[float, Dict[str, float], float]:
+        if cname in memo_flops:
+            return memo_flops[cname], memo_coll[cname], memo_bytes[cname]
+        if cname not in comps or cname in stack:
+            return 0.0, {}, 0.0
+        comp = comps[cname]
+        st = symtabs[cname]
+        flops = 0.0
+        coll: Dict[str, float] = {}
+        byts = 0.0
+        for op in comp.ops:
+            res_b = _shape_bytes(op.type_str)
+
+            def _operand_bytes():
+                total = 0
+                operands = _OPERANDS.search(op.line.split("=", 1)[1])
+                if operands:
+                    for token in operands.group(1).split(","):
+                        token = token.strip().lstrip("%")
+                        if token in st:
+                            total += _shape_bytes(st[token])
+                return total
+
+            if op.opcode == "dynamic-update-slice":
+                # in-place update: traffic ~ 2x the update operand, not the
+                # full buffer (donated caches alias input/output)
+                operands = _OPERANDS.search(op.line.split("=", 1)[1])
+                if operands:
+                    toks = [t.strip().lstrip("%")
+                            for t in operands.group(1).split(",")]
+                    if len(toks) >= 2 and toks[1] in st:
+                        byts += 2 * _shape_bytes(st[toks[1]])
+            elif op.opcode == "dot":
+                # dots stream their operands from HBM: charge reads + write
+                byts += res_b + _operand_bytes()
+            elif op.opcode == "fusion":
+                c = _CALLS_RE.search(op.line)
+                upd = _dus_update_bytes(c.group(1)) if c else None
+                if upd is not None and "dynamic-update-slice" in op.name:
+                    byts += 2 * upd      # in-place cache update fusion
+                else:
+                    byts += 2 * res_b
+            elif op.opcode not in _NO_TRAFFIC:
+                # one write + ~one read per materialized buffer; operand
+                # reads are charged where the operand was produced, so big
+                # loop-invariant buffers sliced inside loops aren't counted
+                # at full size per iteration
+                byts += 2 * res_b
+
+            base = op.opcode[:-6] if op.opcode.endswith("-start") else op.opcode
+            if base in _COLLECTIVES:
+                coll[base] = coll.get(base, 0.0) + res_b
+            if op.opcode == "dot":
+                flops += _dot_flops(op, st)
+
+            mult = 1.0
+            sub: List[str] = []
+            if op.opcode == "while":
+                trip = _TRIP_RE.search(op.line)
+                mult = float(trip.group(1)) if trip else 1.0
+                wb = _WHILE_RE.search(op.line)
+                if wb:
+                    sub.append(wb.group(1))
+            elif op.opcode in ("fusion", "call"):
+                c = _CALLS_RE.search(op.line) or re.search(
+                    r"to_apply=%?([\w.\-]+)", op.line)
+                if c:
+                    sub.append(c.group(1))
+            elif op.opcode == "conditional":
+                b = _BRANCH_RE.search(op.line)
+                if b:
+                    sub += [s.strip().lstrip("%")
+                            for s in b.group(1).split(",")]
+                sub += _TF_RE.findall(op.line)
+            for s in sub:
+                f2, c2, b2 = visit(s, stack + (cname,))
+                flops += mult * f2
+                for k, v in c2.items():
+                    coll[k] = coll.get(k, 0.0) + mult * v
+                if op.opcode == "while":
+                    byts += mult * b2
+                # fusion bodies are not materialized: bytes excluded
+        memo_flops[cname], memo_coll[cname], memo_bytes[cname] = \
+            flops, coll, byts
+        return flops, coll, byts
+
+    flops, coll, byts = visit(entry)
+    return {
+        "flops": flops,
+        "bytes": byts,
+        "collective_bytes": sum(coll.values()),
+        "collectives": coll,
+    }
+
+
+def roofline_terms(per_device_flops: float, per_device_bytes: float,
+                   per_device_coll_bytes: float,
+                   model_flops_global: float, n_chips: int
+                   ) -> Dict[str, float]:
+    t_compute = per_device_flops / PEAK_FLOPS
+    t_memory = per_device_bytes / HBM_BW
+    t_coll = per_device_coll_bytes / ICI_BW
+    t_bound = max(t_compute, t_memory, t_coll, 1e-12)
+    dominant = ("compute" if t_bound == t_compute
+                else "memory" if t_bound == t_memory else "collective")
+    hlo_flops_global = per_device_flops * n_chips
+    return {
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "bound_s": t_bound,
+        "dominant": dominant,
+        "model_flops": model_flops_global,
+        "hlo_flops_global": hlo_flops_global,
+        "useful_flops_ratio": (model_flops_global / hlo_flops_global
+                               if hlo_flops_global else 0.0),
+        "mfu_upper_bound": (model_flops_global
+                            / (n_chips * PEAK_FLOPS * t_bound)),
+    }

@@ -1,0 +1,158 @@
+"""Abstract input specs + AOT step construction for every (arch x shape) cell.
+
+``input_specs`` returns weak-type-correct ShapeDtypeStruct stand-ins for every
+model input (no device allocation) — the dry-run lowers against these.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.models.model import Model, build_model, cache_specs
+from repro.sharding.rules import input_specs_sharding, param_specs
+from repro.train.optimizer import AdamWConfig, AdamWState
+from repro.train.train_step import make_train_step
+
+SD = jax.ShapeDtypeStruct
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    """Abstract model inputs for one shape cell."""
+    B, S = shape.global_batch, shape.seq_len
+    dt = jnp.dtype(cfg.dtype)
+    if shape.kind in ("train", "prefill"):
+        s_text = S - cfg.n_patches if cfg.family == "vlm" else S
+        d: Dict[str, Any] = {"tokens": SD((B, s_text), jnp.int32)}
+        if shape.kind == "train":
+            d["labels"] = SD((B, s_text), jnp.int32)
+        if cfg.family == "encdec":
+            d["frames"] = SD((B, cfg.enc_seq, cfg.d_model), dt)
+        if cfg.family == "vlm":
+            d["patches"] = SD((B, cfg.n_patches, cfg.d_model), dt)
+        return d
+    # decode: one new token against a cache of length S
+    return {"tokens": SD((B, 1), jnp.int32),
+            "cache": cache_specs(cfg, B, S)}
+
+
+def param_count(model: Model) -> Tuple[int, int]:
+    """(total params, active params) — active discounts unrouted experts."""
+    tree = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    total = active = 0
+
+    def visit(path, leaf):
+        nonlocal total, active
+        n = math.prod(leaf.shape)
+        total += n
+        name = None
+        for k in reversed(path):
+            if isinstance(k, jax.tree_util.DictKey):
+                name = str(k.key)
+                break
+        cfg = model.cfg
+        if (cfg.n_experts and leaf.ndim == 4
+                and name in ("wg", "wu", "wd")):
+            active += n * cfg.top_k // cfg.n_experts
+        else:
+            active += n
+        return leaf
+
+    jax.tree_util.tree_map_with_path(visit, tree)
+    return total, active
+
+
+def accum_steps_for(cfg: ModelConfig, shape: ShapeSpec, dp: int,
+                    budget_bytes: float = 4e9) -> int:
+    """Microbatching heuristic.
+
+    With remat the per-device live activations are dominated by the per-layer
+    residual checkpoints: L * (B/accum) * S * d * 2 / dp.  Pick the smallest
+    power-of-two accum that fits them in ``budget_bytes`` while keeping the
+    microbatch at least one sequence per data-parallel group.
+    """
+    if shape.kind != "train":
+        return 1
+    B, S = shape.global_batch, shape.seq_len
+    ckpt = cfg.n_layers * B * S * cfg.d_model * 2.0 / max(dp, 1)
+    # EP-MoE (llama4): every extra microbatch repeats the expert-grad DP
+    # sync, so trade activation memory for fewer syncs (mfu 0.009->0.015).
+    # Non-EP MoE (mixtral) moves the same bytes either way — keep accum.
+    if cfg.n_experts and cfg.n_experts % 16 == 0:
+        budget_bytes *= 2
+    accum = 1
+    while ckpt / accum > budget_bytes and B // (2 * accum) >= dp:
+        accum *= 2
+    return accum
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeSpec, total: int,
+                active: int) -> float:
+    """MODEL_FLOPS = 6*N*D (train) / 2*N*D (inference), N = active params."""
+    tokens = shape.global_batch * (1 if shape.kind == "decode"
+                                   else shape.seq_len)
+    mult = 6.0 if shape.kind == "train" else 2.0
+    return mult * active * tokens
+
+
+def build_cell(cfg: ModelConfig, shape: ShapeSpec, mesh, *,
+               accum: int | None = None):
+    """Build (jitted_fn, abstract_args) for one dry-run cell."""
+    model = build_model(cfg, remat=(shape.kind == "train"))
+    total, active = param_count(model)
+    p_abs = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+
+    if shape.kind == "train":
+        dp = mesh.size // (mesh.shape["model"]
+                           if "model" in mesh.axis_names else 1)
+        accum = accum or accum_steps_for(cfg, shape, dp)
+        opt_cfg = AdamWConfig()
+        p_sh = param_specs(p_abs, mesh, "train")       # ZeRO-1 storage
+        c_sh = param_specs(p_abs, mesh, "compute")     # TP-only compute
+        step = make_train_step(model, opt_cfg, accum_steps=accum,
+                               compute_shardings=c_sh,
+                               storage_shardings=p_sh)
+        opt_abs = AdamWState(
+            step=SD((), jnp.int32),
+            mu=jax.tree.map(lambda p: SD(p.shape, jnp.float32), p_abs),
+            nu=jax.tree.map(lambda p: SD(p.shape, jnp.float32), p_abs))
+        batch_abs = input_specs(cfg, shape)
+        opt_sh = AdamWState(
+            step=jax.sharding.NamedSharding(
+                mesh, jax.sharding.PartitionSpec()),
+            mu=p_sh, nu=p_sh)
+        b_sh = input_specs_sharding(batch_abs, mesh)
+        fn = jax.jit(step,
+                     in_shardings=(p_sh, opt_sh, b_sh),
+                     out_shardings=(p_sh, opt_sh, None),
+                     donate_argnums=(0, 1))
+        return fn, (p_abs, opt_abs, batch_abs), dict(
+            accum=accum, total_params=total, active_params=active)
+
+    mode = "serve"
+    p_sh = param_specs(p_abs, mesh, mode)
+    if shape.kind == "prefill":
+        batch_abs = input_specs(cfg, shape)
+        b_sh = input_specs_sharding(batch_abs, mesh)
+        _, cache_abs = jax.eval_shape(model.prefill, p_abs, batch_abs)
+        c_sh = input_specs_sharding(cache_abs, mesh)
+        fn = jax.jit(model.prefill,
+                     in_shardings=(p_sh, b_sh),
+                     out_shardings=(None, c_sh))
+        return fn, (p_abs, batch_abs), dict(
+            accum=1, total_params=total, active_params=active)
+
+    # decode
+    specs = input_specs(cfg, shape)
+    cache_abs, tok_abs = specs["cache"], specs["tokens"]
+    c_sh = input_specs_sharding(cache_abs, mesh)
+    t_sh = input_specs_sharding({"tokens": tok_abs}, mesh)["tokens"]
+    fn = jax.jit(model.decode,
+                 in_shardings=(p_sh, c_sh, t_sh),
+                 out_shardings=(None, c_sh),
+                 donate_argnums=(1,))
+    return fn, (p_abs, cache_abs, tok_abs), dict(
+        accum=1, total_params=total, active_params=active)

@@ -1,0 +1,122 @@
+"""End-to-end training driver with checkpoint/restart and elastic re-mesh.
+
+Examples:
+  PYTHONPATH=src python -m repro.launch.train --arch mamba2-370m --smoke \
+      --steps 50 --batch 8 --seq 128 --ckpt-dir /tmp/ckpt
+  # kill it, then resume (picks up the latest checkpoint; the data stream
+  # is stateless-deterministic so training continues bit-exact):
+  PYTHONPATH=src python -m repro.launch.train --arch mamba2-370m --smoke \
+      --steps 100 --batch 8 --seq 128 --ckpt-dir /tmp/ckpt --resume
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config, get_smoke_config
+from repro.launch.mesh import make_test_mesh
+from repro.models.model import build_model
+from repro.sharding.rules import input_specs_sharding, param_specs
+from repro.train import checkpoint as ckpt
+from repro.train.data import stream
+from repro.train.optimizer import AdamWConfig, adamw_init
+from repro.train.train_step import make_train_step
+
+
+def train(arch: str, smoke: bool, steps: int, batch: int, seq: int,
+          ckpt_dir: str | None, resume: bool, ckpt_every: int = 20,
+          accum: int = 1, mesh=None, log_every: int = 10, seed: int = 0,
+          lr: float = 1e-3):
+    cfg = get_smoke_config(arch) if smoke else get_config(arch)
+    model = build_model(cfg, remat=not smoke)
+    opt_cfg = AdamWConfig(lr=lr, warmup_steps=max(steps // 20, 5),
+                          total_steps=steps)
+
+    shardings = None
+    if mesh is not None:
+        p_abs = jax.eval_shape(model.init, jax.random.PRNGKey(seed))
+        storage = param_specs(p_abs, mesh, "train")
+        compute = param_specs(p_abs, mesh, "compute")
+        step_fn = make_train_step(model, opt_cfg, accum_steps=accum,
+                                  compute_shardings=compute,
+                                  storage_shardings=storage)
+        from repro.train.optimizer import AdamWState
+        opt_sh = AdamWState(
+            step=jax.sharding.NamedSharding(mesh,
+                                            jax.sharding.PartitionSpec()),
+            mu=storage, nu=storage)
+        shardings = (storage, opt_sh)
+        jit_step = jax.jit(step_fn, in_shardings=(storage, opt_sh, None),
+                           out_shardings=(storage, opt_sh, None),
+                           donate_argnums=(0, 1))
+    else:
+        step_fn = make_train_step(model, opt_cfg, accum_steps=accum)
+        jit_step = jax.jit(step_fn, donate_argnums=(0, 1))
+
+    start = 0
+    if resume and ckpt_dir and (last := ckpt.latest_step(ckpt_dir)) is not None:
+        p_abs = jax.eval_shape(model.init, jax.random.PRNGKey(seed))
+        opt_abs = jax.eval_shape(lambda p: adamw_init(p), p_abs)
+        (params, opt_state), meta = ckpt.restore(
+            ckpt_dir, last, (p_abs, opt_abs),
+            shardings=shardings)
+        start = meta["extra"]["data_index"]
+        print(f"[train] resumed from step {last}")
+    else:
+        params = model.init(jax.random.PRNGKey(seed))
+        opt_state = adamw_init(params)
+        if shardings is not None:
+            params = jax.device_put(params, shardings[0])
+            opt_state = jax.device_put(opt_state, shardings[1])
+
+    losses = []
+    data = stream(cfg, batch, seq, seed=seed, start_index=start)
+    t0 = time.time()
+    for i in range(start, steps):
+        batch_i = next(data)
+        params, opt_state, metrics = jit_step(params, opt_state, batch_i)
+        loss = float(metrics["loss"])
+        losses.append(loss)
+        if i % log_every == 0 or i == steps - 1:
+            tokens = batch * seq * (i - start + 1)
+            print(f"[train] step {i:5d} loss {loss:8.4f} "
+                  f"gnorm {float(metrics['grad_norm']):7.3f} "
+                  f"tok/s {tokens / max(time.time() - t0, 1e-6):9.0f}",
+                  flush=True)
+        if ckpt_dir and ((i + 1) % ckpt_every == 0 or i == steps - 1):
+            ckpt.save(ckpt_dir, i + 1, (params, opt_state),
+                      extra={"data_index": i + 1, "loss": loss})
+    return params, opt_state, losses
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mamba2-370m")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU-feasible)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=20)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--mesh", default=None,
+                    help="dpxtp, e.g. 2x4 (needs that many devices)")
+    args = ap.parse_args()
+
+    mesh = None
+    if args.mesh:
+        dp, tp = (int(x) for x in args.mesh.split("x"))
+        mesh = make_test_mesh(data=dp, model=tp)
+    train(args.arch, args.smoke, args.steps, args.batch, args.seq,
+          args.ckpt_dir, args.resume, ckpt_every=args.ckpt_every,
+          accum=args.accum, mesh=mesh, lr=args.lr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+from repro.models.model import (  # noqa: F401
+    Model,
+    build_model,
+    cache_specs,
+    init_cache,
+)

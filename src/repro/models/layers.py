@@ -1,0 +1,266 @@
+"""Neural net building blocks (pure functional JAX, params = nested dicts).
+
+Attention comes in two reference implementations:
+  * ``naive_attention`` — materializes the (Sq, Skv) score matrix; used for
+    small sequences and as the test oracle.
+  * ``chunked_attention`` — online-softmax over KV chunks (flash-attention
+    algorithm in pure JAX), O(S) memory; causal variants skip fully-masked
+    KV chunks so compiled FLOPs ~ S^2/2.  This is the default for long
+    sequences and the semantics mirrored by the Pallas kernel
+    (``repro.kernels.flash_attention``).
+"""
+from __future__ import annotations
+
+import contextlib
+import math
+import threading
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+_NEG = -1e30
+
+# Pallas kernels have no VJP rules: allow their dispatch only outside
+# differentiated code (serving / inference paths set this true by default;
+# the loss wrapper disables it during its trace).
+_tls = threading.local()
+
+
+def kernels_allowed() -> bool:
+    return getattr(_tls, "kernels_ok", True)
+
+
+@contextlib.contextmanager
+def no_kernels():
+    prev = getattr(_tls, "kernels_ok", True)
+    _tls.kernels_ok = False
+    try:
+        yield
+    finally:
+        _tls.kernels_ok = prev
+
+
+# --------------------------------------------------------------------------
+# initialization helpers
+# --------------------------------------------------------------------------
+
+def dense_init(key, d_in: int, d_out: int, dtype) -> jnp.ndarray:
+    scale = 1.0 / math.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype) -> jnp.ndarray:
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)
+
+
+# --------------------------------------------------------------------------
+# norms
+# --------------------------------------------------------------------------
+
+def rmsnorm(x: jnp.ndarray, w: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    inv = jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (xf * inv * w).astype(x.dtype)
+
+
+def layernorm(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+              eps: float = 1e-5) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * w + b).astype(x.dtype)
+
+
+def apply_norm(cfg, x, p):
+    if cfg.norm == "layernorm":
+        return layernorm(x, p["w"], p["b"])
+    return rmsnorm(x, p["w"])
+
+
+def norm_init(cfg, d: int):
+    if cfg.norm == "layernorm":
+        return {"w": jnp.ones((d,), jnp.float32),
+                "b": jnp.zeros((d,), jnp.float32)}
+    return {"w": jnp.ones((d,), jnp.float32)}
+
+
+# --------------------------------------------------------------------------
+# rotary position embeddings
+# --------------------------------------------------------------------------
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float,
+         frac: float = 1.0) -> jnp.ndarray:
+    """Apply RoPE to x (..., S, H, hd) with positions (..., S).
+
+    ``frac`` rotates only the first frac*hd dims (chatglm "2d" RoPE uses 0.5,
+    stablelm 0.25); the remainder passes through.
+    """
+    hd = x.shape[-1]
+    rot = int(hd * frac)
+    rot -= rot % 2
+    if rot == 0:
+        return x
+    x_rot, x_pass = x[..., :rot], x[..., rot:]
+    half = rot // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs       # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]                              # (..., S, 1, half)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x_rot[..., :half], x_rot[..., half:]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    out = jnp.concatenate([y1, y2], axis=-1).astype(x.dtype)
+    return jnp.concatenate([out, x_pass], axis=-1) if rot < hd else out
+
+
+# --------------------------------------------------------------------------
+# attention
+# --------------------------------------------------------------------------
+
+def _mask(pos_q, pos_k, causal: bool, window: int):
+    """(..., Sq, Sk) boolean mask: True = attend."""
+    m = jnp.ones(pos_q.shape[:-1] + (pos_q.shape[-1], pos_k.shape[-1]), bool)
+    dq = pos_q[..., :, None]
+    dk = pos_k[..., None, :]
+    if causal:
+        m &= dk <= dq
+    if window > 0:
+        m &= dk > dq - window
+    return m
+
+
+def naive_attention(q, k, v, *, causal=True, window=0, q_offset=0):
+    """Oracle attention.  q: (B,Sq,H,hd); k,v: (B,Sk,KV,hd) -> (B,Sq,H,hd)."""
+    B, Sq, H, hd = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, Sq, KV, G, hd) * (hd ** -0.5)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg, k,
+                   preferred_element_type=jnp.float32)
+    pos_q = q_offset + jnp.arange(Sq)
+    pos_k = jnp.arange(Sk)
+    m = _mask(pos_q, pos_k, causal, window)
+    s = jnp.where(m, s, _NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", p.astype(v.dtype), v,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(B, Sq, H, hd).astype(q.dtype)
+
+
+def chunked_attention(q, k, v, *, causal=True, window=0, q_offset=0,
+                      q_chunk=1024, kv_chunk=1024):
+    """Online-softmax attention, O(S) memory.
+
+    On TPU this dispatches to the Pallas flash-attention kernel
+    (``repro.kernels.flash_attention``); elsewhere it runs the same
+    algorithm in pure JAX.  Causal mode iterates query chunks at the Python
+    level so each query chunk only scans KV chunks that are not fully
+    masked — compiled attention FLOPs are ~S^2/2 instead of S^2.
+    """
+    B, Sq, H, hd = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    G = H // KV
+
+    if (jax.default_backend() == "tpu" and kernels_allowed()
+            and q_offset == 0 and Sq % 256 == 0 and Sk % 512 == 0):
+        from repro.kernels.flash_attention.ops import flash_attention
+        return flash_attention(q, k, v, causal=causal, window=window)
+
+    if Sq % q_chunk or Sk % kv_chunk or Sq <= q_chunk:
+        return naive_attention(q, k, v, causal=causal, window=window,
+                               q_offset=q_offset)
+
+    qg = q.reshape(B, Sq, KV, G, hd) * (hd ** -0.5)
+    nq, nk = Sq // q_chunk, Sk // kv_chunk
+    kc = k.reshape(B, nk, kv_chunk, KV, hd)
+    vc = v.reshape(B, nk, kv_chunk, KV, hd)
+
+    def q_block(i):
+        qi = jax.lax.dynamic_slice_in_dim(qg, i * q_chunk, q_chunk, 1)
+        pos_q = q_offset + i * q_chunk + jnp.arange(q_chunk)
+
+        def kv_step(carry, xs):
+            m_run, l_run, acc = carry
+            kj, vj, j = xs
+            s = jnp.einsum("bqkgd,bckd->bkgqc", qi, kj,
+                           preferred_element_type=jnp.float32)
+            pos_k = j * kv_chunk + jnp.arange(kv_chunk)
+            msk = _mask(pos_q, pos_k, causal, window)
+            s = jnp.where(msk, s, _NEG)
+            m_new = jnp.maximum(m_run, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m_run - m_new)
+            l_run = l_run * corr + jnp.sum(p, axis=-1)
+            pv = jnp.einsum("bkgqc,bckd->bkgqd", p.astype(vj.dtype), vj,
+                            preferred_element_type=jnp.float32)
+            acc = acc * corr[..., None] + pv
+            return (m_new, l_run, acc), None
+
+        # causal: kv chunks beyond the diagonal are fully masked -> skip;
+        # sliding window additionally bounds how far back we look.
+        lo, hi = 0, nk
+        if causal:
+            hi = min(i + 1, nk)
+            if window > 0:
+                lo = max(0, (i * q_chunk + q_chunk - window) // kv_chunk)
+        init = (jnp.full((B, KV, G, q_chunk), _NEG, jnp.float32),
+                jnp.zeros((B, KV, G, q_chunk), jnp.float32),
+                jnp.zeros((B, KV, G, q_chunk, hd), jnp.float32))
+        (m_run, l_run, acc), _ = jax.lax.scan(
+            kv_step, init,
+            (kc[:, lo:hi].swapaxes(0, 1), vc[:, lo:hi].swapaxes(0, 1),
+             jnp.arange(lo, hi)))
+        o = acc / jnp.maximum(l_run, 1e-30)[..., None]
+        return o.transpose(0, 3, 1, 2, 4).reshape(B, q_chunk, H, hd)
+
+    out = jnp.concatenate([q_block(i) for i in range(nq)], axis=1)
+    return out.astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, cache_len, *, window=0):
+    """Single-position attention against a (possibly padded) KV cache.
+
+    q: (B,1,H,hd); caches: (B,Smax,KV,hd); cache_len: () current filled length
+    (the new token's position == cache_len).  Memory/bandwidth bound by design.
+    """
+    B, _, H, hd = q.shape
+    Smax, KV = k_cache.shape[1], k_cache.shape[2]
+    G = H // KV
+    qg = q.reshape(B, KV, G, hd) * (hd ** -0.5)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, k_cache,
+                   preferred_element_type=jnp.float32)
+    pos_k = jnp.arange(Smax)
+    valid = pos_k <= cache_len
+    if window > 0:
+        valid &= pos_k > cache_len - window
+    s = jnp.where(valid, s, _NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bskd->bkgd", p.astype(v_cache.dtype), v_cache,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(B, 1, H, hd).astype(q.dtype)
+
+
+# --------------------------------------------------------------------------
+# MLPs
+# --------------------------------------------------------------------------
+
+def mlp_init(cfg, key, d: int, d_ff: int):
+    ks = jax.random.split(key, 3)
+    dt = jnp.dtype(cfg.dtype)
+    if cfg.act == "swiglu":
+        return {"wg": dense_init(ks[0], d, d_ff, dt),
+                "wu": dense_init(ks[1], d, d_ff, dt),
+                "wd": dense_init(ks[2], d_ff, d, dt)}
+    return {"w1": dense_init(ks[0], d, d_ff, dt),
+            "w2": dense_init(ks[1], d_ff, d, dt)}
+
+
+def mlp_apply(cfg, p, x):
+    if cfg.act == "swiglu":
+        h = jax.nn.silu(x @ p["wg"]) * (x @ p["wu"])
+        return h @ p["wd"]
+    h = x @ p["w1"]
+    h = jax.nn.gelu(h) if cfg.act == "gelu" else jnp.square(jax.nn.relu(h))
+    return h @ p["w2"]

@@ -1,0 +1,573 @@
+"""Unified model builder: one API across all assigned architecture families.
+
+``build_model(cfg)`` returns a :class:`Model` with pure functions:
+
+  init(key)                       -> params
+  loss(params, batch)             -> (scalar loss, metrics dict)     [train]
+  prefill(params, batch)          -> (last-position logits, cache)   [serve]
+  decode(params, cache, tokens)   -> (logits, cache)                 [serve]
+
+Layer stacks are ``lax.scan`` over parameters stacked on a leading L axis, so
+HLO size is O(1) in depth (critical for the 88-layer granite dry-run).
+Families: dense | moe | ssm | hybrid | encdec | vlm.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import moe as MOE
+from repro.models import ssm as SSM
+from repro.sharding.api import constrain
+
+Params = Dict[str, Any]
+Batch = Dict[str, jnp.ndarray]
+
+
+class Model(NamedTuple):
+    cfg: ModelConfig
+    init: Callable[[jax.Array], Params]
+    loss: Callable[[Params, Batch], Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]]
+    prefill: Callable[[Params, Batch], Tuple[jnp.ndarray, Any]]
+    decode: Callable[[Params, Any, jnp.ndarray], Tuple[jnp.ndarray, Any]]
+
+
+# ---------------------------------------------------------------------------
+# attention block
+# ---------------------------------------------------------------------------
+
+def _attn_init(cfg: ModelConfig, key) -> Params:
+    d, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": L.dense_init(ks[0], d, H * hd, dt),
+        "wk": L.dense_init(ks[1], d, KV * hd, dt),
+        "wv": L.dense_init(ks[2], d, KV * hd, dt),
+        "wo": L.dense_init(ks[3], H * hd, d, dt),
+    }
+
+
+def _qkv(cfg, p, x, kv_x=None):
+    B, S = x.shape[:2]
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    kv_x = x if kv_x is None else kv_x
+    Skv = kv_x.shape[1]
+    q = (x @ p["wq"]).reshape(B, S, H, hd)
+    k = (kv_x @ p["wk"]).reshape(B, Skv, KV, hd)
+    v = (kv_x @ p["wv"]).reshape(B, Skv, KV, hd)
+    return q, k, v
+
+
+def _attn_full(cfg, p, x, pos0=0, *, causal=True, use_rope=True):
+    """Full-sequence self attention.  Returns (out, (k, v))."""
+    q, k, v = _qkv(cfg, p, x)
+    if use_rope and cfg.rope_frac > 0:
+        pos = pos0 + jnp.arange(x.shape[1])
+        q = L.rope(q, pos, cfg.rope_theta, cfg.rope_frac)
+        k = L.rope(k, pos, cfg.rope_theta, cfg.rope_frac)
+    o = L.chunked_attention(q, k, v, causal=causal,
+                            window=cfg.window if causal else 0)
+    B, S = x.shape[:2]
+    return o.reshape(B, S, -1) @ p["wo"], (k, v)
+
+
+def _attn_cross(cfg, p, x, k, v):
+    """Cross attention against precomputed enc K/V (no mask, no rope)."""
+    B, S = x.shape[:2]
+    H, hd = cfg.n_heads, cfg.head_dim_
+    q = (x @ p["wq"]).reshape(B, S, H, hd)
+    o = L.chunked_attention(q, k, v, causal=False)
+    return o.reshape(B, S, -1) @ p["wo"]
+
+
+def _attn_decode(cfg, p, x, k_cache, v_cache, pos, *, use_rope=True,
+                 cross=False):
+    """Single-token attention.  Returns (out, new_k_cache, new_v_cache)."""
+    B = x.shape[0]
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    q = (x @ p["wq"]).reshape(B, 1, H, hd)
+    if cross:
+        if use_rope and cfg.rope_frac > 0:
+            q = L.rope(q, jnp.full((1,), pos), cfg.rope_theta, cfg.rope_frac)
+        o = L.decode_attention(q, k_cache, v_cache,
+                               jnp.asarray(k_cache.shape[1] - 1))
+        return o.reshape(B, -1) @ p["wo"], k_cache, v_cache
+    k = (x @ p["wk"]).reshape(B, 1, KV, hd)
+    v = (x @ p["wv"]).reshape(B, 1, KV, hd)
+    if use_rope and cfg.rope_frac > 0:
+        pp = jnp.full((1,), pos)
+        q = L.rope(q, pp, cfg.rope_theta, cfg.rope_frac)
+        k = L.rope(k, pp, cfg.rope_theta, cfg.rope_frac)
+    k_cache = jax.lax.dynamic_update_slice(k_cache, k.astype(k_cache.dtype),
+                                           (0, pos, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(v_cache, v.astype(v_cache.dtype),
+                                           (0, pos, 0, 0))
+    o = L.decode_attention(q, k_cache, v_cache, pos, window=cfg.window)
+    return o.reshape(B, -1) @ p["wo"], k_cache, v_cache
+
+
+# ---------------------------------------------------------------------------
+# per-layer blocks (full-sequence + decode variants)
+# ---------------------------------------------------------------------------
+
+def _layer_init(cfg: ModelConfig, key) -> Params:
+    ks = jax.random.split(key, 4)
+    if cfg.family == "ssm" or cfg.family == "hybrid":
+        return {"ln1": L.norm_init(cfg, cfg.d_model),
+                "ssm": SSM.ssm_init(cfg, ks[0])}
+    p = {"ln1": L.norm_init(cfg, cfg.d_model),
+         "attn": _attn_init(cfg, ks[0]),
+         "ln2": L.norm_init(cfg, cfg.d_model)}
+    if cfg.family == "moe":
+        p["moe"] = MOE.moe_init(cfg, ks[1], cfg.d_model, cfg.d_ff)
+    else:
+        p["mlp"] = L.mlp_init(cfg, ks[1], cfg.d_model, cfg.d_ff)
+    return p
+
+
+def _block_full(cfg, lp, h, pos0, moe_scatter=True):
+    """Transformer block, full sequence.  Returns (h, (k, v), aux).
+
+    moe_scatter: scatter/gather dispatch (training hot path); the einsum
+    form is kept for forward-only serving where XLA's scatter partitioning
+    was measured to blow up prefill memory (EXPERIMENTS.md §Perf).
+    """
+    y, kv = _attn_full(cfg, lp["attn"], L.apply_norm(cfg, h, lp["ln1"]), pos0)
+    h = h + y
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.family == "moe":
+        fn = MOE.moe_apply if moe_scatter else MOE.moe_apply_einsum
+        y, aux = fn(cfg, lp["moe"], L.apply_norm(cfg, h, lp["ln2"]))
+    else:
+        y = L.mlp_apply(cfg, lp["mlp"], L.apply_norm(cfg, h, lp["ln2"]))
+    return h + y, kv, aux
+
+
+def _block_decode(cfg, lp, h, kc, vc, pos):
+    y, kc, vc = _attn_decode(cfg, lp["attn"],
+                             L.apply_norm(cfg, h, lp["ln1"]), kc, vc, pos)
+    h = h + y[:, None, :]
+    if cfg.family == "moe":
+        y, _ = MOE.moe_apply_einsum(cfg, lp["moe"],
+                                    L.apply_norm(cfg, h, lp["ln2"]))
+    else:
+        y = L.mlp_apply(cfg, lp["mlp"], L.apply_norm(cfg, h, lp["ln2"]))
+    return h + y, kc, vc
+
+
+# ---------------------------------------------------------------------------
+# decoder-only stacks (dense / moe / vlm / ssm / hybrid)
+# ---------------------------------------------------------------------------
+
+def _shared_idx(cfg) -> jnp.ndarray:
+    """Per-layer invocation index for the hybrid shared attention block."""
+    idx, n = [], 0
+    for i in range(cfg.n_layers):
+        if cfg.attn_every and (i % cfg.attn_every == cfg.attn_every - 1):
+            idx.append(n)
+            n += 1
+        else:
+            idx.append(-1)
+    return jnp.asarray(idx, jnp.int32), n
+
+
+def n_shared_invocations(cfg) -> int:
+    return _shared_idx(cfg)[1] if cfg.family == "hybrid" else 0
+
+
+def _stack_full(cfg, params, h, pos0, collect_cache: bool, remat: bool,
+                moe_scatter: bool = True):
+    """Scan the layer stack over a full sequence.
+
+    Returns (h, per_layer_cache, shared_cache, aux_sum).
+    """
+    if cfg.family in ("ssm", "hybrid"):
+        inv_idx, n_inv = (_shared_idx(cfg) if cfg.family == "hybrid"
+                          else (jnp.zeros((cfg.n_layers,), jnp.int32), 0))
+
+        def body(carry, xs):
+            h, shared_kv = carry
+            lp, inv = xs
+            res = SSM.ssm_apply(cfg, lp["ssm"],
+                                L.apply_norm(cfg, h, lp["ln1"]),
+                                with_cache=collect_cache)
+            y, ssm_cache = res if collect_cache else (res, None)
+            h = h + y
+            if cfg.family == "hybrid":
+                def with_attn(args):
+                    h, shared_kv = args
+                    sp = params["shared_block"]
+                    y, kv = _attn_full(cfg, sp["attn"],
+                                       L.apply_norm(cfg, h, sp["ln1"]), pos0)
+                    h = h + y
+                    h = h + L.mlp_apply(cfg, sp["mlp"],
+                                        L.apply_norm(cfg, h, sp["ln2"]))
+                    if shared_kv is not None:
+                        k, v = kv
+                        sk = jax.lax.dynamic_update_slice(
+                            shared_kv[0], k[None].astype(shared_kv[0].dtype),
+                            (inv, 0, 0, 0, 0))
+                        sv = jax.lax.dynamic_update_slice(
+                            shared_kv[1], v[None].astype(shared_kv[1].dtype),
+                            (inv, 0, 0, 0, 0))
+                        shared_kv = (sk, sv)
+                    return h, shared_kv
+
+                h, shared_kv = jax.lax.cond(inv >= 0, with_attn,
+                                            lambda a: a, (h, shared_kv))
+            return (h, shared_kv), ssm_cache
+
+        if remat:
+            body = jax.checkpoint(body)
+        shared_kv = None
+        if collect_cache and cfg.family == "hybrid" and n_inv:
+            B, S = h.shape[:2]
+            KV, hd = cfg.n_kv_heads, cfg.head_dim_
+            shared_kv = (jnp.zeros((n_inv, B, S, KV, hd), h.dtype),
+                         jnp.zeros((n_inv, B, S, KV, hd), h.dtype))
+        (h, shared_kv), ssm_caches = jax.lax.scan(
+            body, (h, shared_kv), (params["layers"], inv_idx))
+        return h, ssm_caches, shared_kv, jnp.zeros((), jnp.float32)
+
+    def body(h, lp):
+        h, kv, aux = _block_full(cfg, lp, h, pos0, moe_scatter=moe_scatter)
+        return h, (kv if collect_cache else None, aux)
+
+    if remat:
+        # (saving the named 'moe_dispatch' tensors was measured: -2% coll,
+        # +60% peak memory on mixtral -> full recompute wins; §Perf)
+        body = jax.checkpoint(body)
+    h, (kvs, aux) = jax.lax.scan(body, h, params["layers"])
+    return h, kvs, None, jnp.sum(aux)
+
+
+def _stack_decode(cfg, params, h, cache, pos):
+    """One-token decode through the layer stack; cache arrays lead with L."""
+    if cfg.family in ("ssm", "hybrid"):
+        inv_idx, n_inv = (_shared_idx(cfg) if cfg.family == "hybrid"
+                          else (jnp.zeros((cfg.n_layers,), jnp.int32), 0))
+
+        def body(carry, xs):
+            h, shared_kv = carry
+            lp, conv, state, inv = xs
+            y, new_c = SSM.ssm_decode(cfg, lp["ssm"],
+                                      L.apply_norm(cfg, h, lp["ln1"]),
+                                      SSM.SSMCache(conv, state))
+            h = h + y
+            if cfg.family == "hybrid":
+                def with_attn(args):
+                    h, shared_kv = args
+                    sp = params["shared_block"]
+                    sk = jax.lax.dynamic_index_in_dim(shared_kv[0], inv, 0,
+                                                      keepdims=False)
+                    sv = jax.lax.dynamic_index_in_dim(shared_kv[1], inv, 0,
+                                                      keepdims=False)
+                    y, sk, sv = _attn_decode(
+                        cfg, sp["attn"], L.apply_norm(cfg, h, sp["ln1"])[:, 0],
+                        sk, sv, pos)
+                    h = h + y[:, None, :]
+                    h = h + L.mlp_apply(cfg, sp["mlp"],
+                                        L.apply_norm(cfg, h, sp["ln2"]))
+                    sks = jax.lax.dynamic_update_slice(
+                        shared_kv[0], sk[None], (inv, 0, 0, 0, 0))
+                    svs = jax.lax.dynamic_update_slice(
+                        shared_kv[1], sv[None], (inv, 0, 0, 0, 0))
+                    return h, (sks, svs)
+
+                h, shared_kv = jax.lax.cond(inv >= 0, with_attn,
+                                            lambda a: a, (h, shared_kv))
+            return (h, shared_kv), (new_c.conv, new_c.state)
+
+        (h, shared_kv), (convs, states) = jax.lax.scan(
+            body, (h, cache.get("shared")),
+            (params["layers"], cache["conv"], cache["state"], inv_idx))
+        new_cache = dict(cache, conv=convs, state=states)
+        if cfg.family == "hybrid":
+            new_cache["shared"] = shared_kv
+        return h, new_cache
+
+    def body(h, xs):
+        lp, kc, vc = xs
+        h, kc, vc = _block_decode(cfg, lp, h, kc, vc, pos)
+        return h, (kc, vc)
+
+    h, (ks, vs) = jax.lax.scan(body, h, (params["layers"], cache["k"],
+                                         cache["v"]))
+    return h, dict(cache, k=ks, v=vs)
+
+
+# ---------------------------------------------------------------------------
+# whisper-style encoder-decoder
+# ---------------------------------------------------------------------------
+
+def _encdec_init(cfg: ModelConfig, key) -> Params:
+    ks = jax.random.split(key, 8)
+    dt = jnp.dtype(cfg.dtype)
+    d = cfg.d_model
+
+    def enc_layer(k):
+        k1, k2 = jax.random.split(k)
+        return {"ln1": L.norm_init(cfg, d), "attn": _attn_init(cfg, k1),
+                "ln2": L.norm_init(cfg, d),
+                "mlp": L.mlp_init(cfg, k2, d, cfg.d_ff)}
+
+    def dec_layer(k):
+        k1, k2, k3 = jax.random.split(k, 3)
+        return {"ln1": L.norm_init(cfg, d), "attn": _attn_init(cfg, k1),
+                "lnx": L.norm_init(cfg, d), "xattn": _attn_init(cfg, k2),
+                "ln2": L.norm_init(cfg, d),
+                "mlp": L.mlp_init(cfg, k3, d, cfg.d_ff)}
+
+    max_pos = 32_768
+    return {
+        "tok_emb": L.embed_init(ks[0], cfg.vocab_padded, d, dt),
+        "dec_pos_emb": (jax.random.normal(ks[1], (max_pos, d), jnp.float32)
+                        * 0.01).astype(dt),
+        "enc_pos_emb": (jax.random.normal(ks[2], (cfg.enc_seq, d),
+                                          jnp.float32) * 0.01).astype(dt),
+        "enc_layers": jax.vmap(enc_layer)(
+            jax.random.split(ks[3], cfg.n_enc_layers)),
+        "enc_ln_f": L.norm_init(cfg, d),
+        "layers": jax.vmap(dec_layer)(jax.random.split(ks[4], cfg.n_layers)),
+        "ln_f": L.norm_init(cfg, d),
+    }
+
+
+def _encode(cfg, params, frames, remat: bool):
+    h = frames + params["enc_pos_emb"][None, :frames.shape[1]]
+
+    def body(h, lp):
+        y, _ = _attn_full(cfg, lp["attn"], L.apply_norm(cfg, h, lp["ln1"]),
+                          0, causal=False, use_rope=False)
+        h = h + y
+        h = h + L.mlp_apply(cfg, lp["mlp"], L.apply_norm(cfg, h, lp["ln2"]))
+        return h, None
+
+    if remat:
+        body = jax.checkpoint(body)
+    h, _ = jax.lax.scan(body, h, params["enc_layers"])
+    return L.apply_norm(cfg, h, params["enc_ln_f"])
+
+
+def _decode_stack_encdec(cfg, params, h, enc_out, pos0, collect, remat):
+    """Full-sequence decoder pass.  Returns (h, (self_k, self_v, x_k, x_v))."""
+    KV, hd = cfg.n_kv_heads, cfg.head_dim_
+    B = h.shape[0]
+
+    def body(h, lp):
+        y, kv = _attn_full(cfg, lp["attn"], L.apply_norm(cfg, h, lp["ln1"]),
+                           pos0, use_rope=False)
+        h = h + y
+        xk = (enc_out @ lp["xattn"]["wk"]).reshape(B, -1, KV, hd)
+        xv = (enc_out @ lp["xattn"]["wv"]).reshape(B, -1, KV, hd)
+        h = h + _attn_cross(cfg, lp["xattn"],
+                            L.apply_norm(cfg, h, lp["lnx"]), xk, xv)
+        h = h + L.mlp_apply(cfg, lp["mlp"], L.apply_norm(cfg, h, lp["ln2"]))
+        return h, (kv[0], kv[1], xk, xv) if collect else None
+
+    if remat:
+        body = jax.checkpoint(body)
+    return jax.lax.scan(body, h, params["layers"])
+
+
+# ---------------------------------------------------------------------------
+# losses / heads
+# ---------------------------------------------------------------------------
+
+def _lm_head(cfg, params, h):
+    h = L.apply_norm(cfg, h, params["ln_f"])
+    w = params["tok_emb"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = h @ w
+    if cfg.vocab_padded != cfg.vocab_size:  # mask the padding entries
+        pad_mask = jnp.arange(cfg.vocab_padded) < cfg.vocab_size
+        logits = jnp.where(pad_mask, logits, jnp.asarray(-1e30, logits.dtype))
+    return logits
+
+
+def _xent(logits, labels, mask):
+    """CE + z-loss; labels (B,S) i32, mask (B,S) f32."""
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    ll = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    ce = (lse - ll) * mask
+    z = jnp.square(lse) * mask
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.sum(ce) / denom + 1e-4 * jnp.sum(z) / denom, jnp.sum(ce) / denom
+
+
+# ---------------------------------------------------------------------------
+# build_model
+# ---------------------------------------------------------------------------
+
+def build_model(cfg: ModelConfig, remat: bool = True) -> Model:
+    dt = jnp.dtype(cfg.dtype)
+
+    # ---------------- init ----------------
+    def init(key) -> Params:
+        if cfg.family == "encdec":
+            return _encdec_init(cfg, key)
+        ks = jax.random.split(key, 4)
+        params = {
+            "tok_emb": L.embed_init(ks[0], cfg.vocab_padded, cfg.d_model, dt),
+            "layers": jax.vmap(lambda k: _layer_init(cfg, k))(
+                jax.random.split(ks[1], cfg.n_layers)),
+            "ln_f": L.norm_init(cfg, cfg.d_model),
+        }
+        if not cfg.tie_embeddings:
+            params["lm_head"] = L.dense_init(ks[2], cfg.d_model,
+                                             cfg.vocab_padded, dt)
+        if cfg.family == "hybrid":
+            k1, k2 = jax.random.split(ks[3])
+            params["shared_block"] = {
+                "ln1": L.norm_init(cfg, cfg.d_model),
+                "attn": _attn_init(cfg, k1),
+                "ln2": L.norm_init(cfg, cfg.d_model),
+                "mlp": L.mlp_init(cfg, k2, cfg.d_model, cfg.d_ff),
+            }
+        return params
+
+    # ---------------- embedding ----------------
+    def embed(params, batch, *, for_loss: bool):
+        tok = batch["tokens"]
+        h = params["tok_emb"][tok]
+        if cfg.family == "vlm":
+            h = jnp.concatenate([batch["patches"].astype(h.dtype), h], axis=1)
+        return constrain(h, "batch", None, None)
+
+    # ---------------- loss (train) ----------------
+    def loss(params, batch):
+        with L.no_kernels():   # Pallas kernels have no VJP: jnp path here
+            return _loss_inner(params, batch)
+
+    def _loss_inner(params, batch):
+        if cfg.family == "encdec":
+            enc_out = _encode(cfg, params, batch["frames"].astype(dt), remat)
+            h = params["tok_emb"][batch["tokens"]]
+            h = h + params["dec_pos_emb"][None, :h.shape[1]]
+            h = constrain(h, "batch", None, None)
+            h, _ = _decode_stack_encdec(cfg, params, h, enc_out, 0, False,
+                                        remat)
+            logits = _lm_head(cfg, params, h)
+            mask = (batch["labels"] >= 0).astype(jnp.float32)
+            lbl = jnp.maximum(batch["labels"], 0)
+            total, ce = _xent(logits, lbl, mask)
+            return total, {"ce": ce}
+
+        h = embed(params, batch, for_loss=True)
+        h, _, _, aux = _stack_full(cfg, params, h, 0, False, remat)
+        logits = _lm_head(cfg, params, h)
+        labels = batch["labels"]
+        if cfg.family == "vlm":  # patch positions carry no labels
+            npat = batch["patches"].shape[1]
+            pad = jnp.full(labels.shape[:1] + (npat,), -1, labels.dtype)
+            labels = jnp.concatenate([pad, labels], axis=1)
+        mask = (labels >= 0).astype(jnp.float32)
+        lbl = jnp.maximum(labels, 0)
+        total, ce = _xent(logits, lbl, mask)
+        total = total + 0.01 * aux
+        return total, {"ce": ce, "aux": aux}
+
+    # ---------------- prefill (serve) ----------------
+    def prefill(params, batch):
+        if cfg.family == "encdec":
+            enc_out = _encode(cfg, params, batch["frames"].astype(dt), False)
+            h = params["tok_emb"][batch["tokens"]]
+            h = h + params["dec_pos_emb"][None, :h.shape[1]]
+            h, kvs = _decode_stack_encdec(cfg, params, h, enc_out, 0, True,
+                                          False)
+            logits = _lm_head(cfg, params, h[:, -1:, :])[:, 0]
+            cache = {"len": jnp.asarray(batch["tokens"].shape[1], jnp.int32),
+                     "k": kvs[0], "v": kvs[1], "xk": kvs[2], "xv": kvs[3]}
+            return logits, cache
+
+        h = embed(params, batch, for_loss=False)
+        S = h.shape[1]
+        h, kvs, shared, _ = _stack_full(cfg, params, h, 0, True, False,
+                                        moe_scatter=False)
+        logits = _lm_head(cfg, params, h[:, -1:, :])[:, 0]
+        cache = {"len": jnp.asarray(S, jnp.int32)}
+        if cfg.family in ("ssm", "hybrid"):
+            cache["conv"], cache["state"] = kvs.conv, kvs.state
+            if cfg.family == "hybrid":
+                cache["shared"] = shared
+        else:
+            cache["k"], cache["v"] = kvs
+        return logits, cache
+
+    # ---------------- decode (serve) ----------------
+    def decode(params, cache, tokens):
+        pos = cache["len"]
+        h = params["tok_emb"][tokens]                      # (B, 1, D)
+        if cfg.family == "encdec":
+            h = h + jax.lax.dynamic_slice_in_dim(
+                params["dec_pos_emb"], pos, 1, 0)[None]
+
+            def body(h, xs):
+                lp, kc, vc, xk, xv = xs
+                y, kc, vc = _attn_decode(
+                    cfg, lp["attn"], L.apply_norm(cfg, h, lp["ln1"])[:, 0],
+                    kc, vc, pos, use_rope=False)
+                h = h + y[:, None, :]
+                y, _, _ = _attn_decode(
+                    cfg, lp["xattn"], L.apply_norm(cfg, h, lp["lnx"])[:, 0],
+                    xk, xv, pos, cross=True, use_rope=False)
+                h = h + y[:, None, :]
+                h = h + L.mlp_apply(cfg, lp["mlp"],
+                                    L.apply_norm(cfg, h, lp["ln2"]))
+                return h, (kc, vc)
+
+            h, (ks, vs) = jax.lax.scan(
+                body, h, (params["layers"], cache["k"], cache["v"],
+                          cache["xk"], cache["xv"]))
+            new_cache = dict(cache, k=ks, v=vs, len=pos + 1)
+        else:
+            h, new_cache = _stack_decode(cfg, params, h, cache, pos)
+            new_cache["len"] = pos + 1
+        logits = _lm_head(cfg, params, h[:, -1:, :])[:, 0]
+        return logits, new_cache
+
+    return Model(cfg=cfg, init=init, loss=loss, prefill=prefill,
+                 decode=decode)
+
+
+# ---------------------------------------------------------------------------
+# cache construction (for drivers and the dry-run's decode cells)
+# ---------------------------------------------------------------------------
+
+def cache_specs(cfg: ModelConfig, batch: int, max_seq: int):
+    """abstract cache pytree for decode at a given (batch, cache length)."""
+    dt = jnp.dtype(cfg.dtype)
+    Ld = cfg.n_layers
+    KV, hd = cfg.n_kv_heads, cfg.head_dim_
+    sd = jax.ShapeDtypeStruct
+    if cfg.family in ("ssm", "hybrid"):
+        d_inner, n, heads, conv_dim = SSM.ssm_dims(cfg)
+        c = {"len": sd((), jnp.int32),
+             "conv": sd((Ld, batch, cfg.conv_width - 1, conv_dim), dt),
+             "state": sd((Ld, batch, heads, cfg.ssm_head_dim, n),
+                         jnp.float32)}
+        if cfg.family == "hybrid":
+            n_inv = n_shared_invocations(cfg)
+            c["shared"] = (sd((n_inv, batch, max_seq, KV, hd), dt),
+                           sd((n_inv, batch, max_seq, KV, hd), dt))
+        return c
+    c = {"len": sd((), jnp.int32),
+         "k": sd((Ld, batch, max_seq, KV, hd), dt),
+         "v": sd((Ld, batch, max_seq, KV, hd), dt)}
+    if cfg.family == "encdec":
+        c["xk"] = sd((Ld, batch, cfg.enc_seq, KV, hd), dt)
+        c["xv"] = sd((Ld, batch, cfg.enc_seq, KV, hd), dt)
+    return c
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int, filled: int = 0):
+    specs = cache_specs(cfg, batch, max_seq)
+    cache = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), specs)
+    cache["len"] = jnp.asarray(filled, jnp.int32)
+    return cache

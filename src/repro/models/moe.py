@@ -1,0 +1,156 @@
+"""Mixture-of-Experts layer (mixtral top-2, llama4-scout top-1 + shared).
+
+GShard/Switch-style capacity-bounded dense dispatch: tokens are split into
+groups (sharded across the data axis), each group computes a one-hot
+dispatch tensor (g, E, C) so all expert compute is dense einsums — no ragged
+scatter, shardable over the expert axis (EP) when E divides the model axis,
+else over the FFN dim (TP).  Over-capacity tokens are dropped (residual
+passthrough), matching the standard TPU MoE recipe.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.ad_checkpoint import checkpoint_name
+
+from repro.models import layers
+from repro.sharding.api import constrain
+
+
+def _group_size(n_tokens: int) -> int:
+    g = 4096
+    while n_tokens % g:
+        g //= 2
+    return max(g, 1)
+
+
+def moe_init(cfg, key, d: int, d_ff: int):
+    ks = jax.random.split(key, 5)
+    dt = jnp.dtype(cfg.dtype)
+    E = cfg.n_experts
+    scale = 1.0 / math.sqrt(d)
+    p = {
+        "router": (jax.random.normal(ks[0], (d, E), jnp.float32) * scale
+                   ).astype(jnp.float32),
+        "wg": (jax.random.normal(ks[1], (E, d, d_ff), jnp.float32) * scale).astype(dt),
+        "wu": (jax.random.normal(ks[2], (E, d, d_ff), jnp.float32) * scale).astype(dt),
+        "wd": (jax.random.normal(ks[3], (E, d_ff, d), jnp.float32)
+               * (1.0 / math.sqrt(d_ff))).astype(dt),
+    }
+    if cfg.moe_shared_expert:
+        p["shared"] = layers.mlp_init(cfg, ks[4], d, d_ff)
+    return p
+
+
+def _route(cfg, p, xt):
+    """Shared routing: top-k gates + capacity-bounded expert positions.
+
+    Returns (gate_vals (G,g,k), idx (G,g,k), keep (G,g,k), pos (G,g,k), aux).
+    """
+    G, g, D = xt.shape
+    E, k = cfg.n_experts, cfg.top_k
+    logits = (xt.astype(jnp.float32) @ p["router"])             # (G, g, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, idx = jax.lax.top_k(probs, k)                    # (G, g, k)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)       # renormalize
+
+    cap = int(math.ceil(k * g / E * cfg.capacity_factor))
+    cap = min(max(8 * ((cap + 7) // 8), 8), g * k)
+
+    # slot-major cumulative positions: top-1 choices win capacity first.
+    onehot = jax.nn.one_hot(idx, E, dtype=jnp.float32)          # (G, g, k, E)
+    slot_major = onehot.transpose(0, 2, 1, 3).reshape(G, k * g, E)
+    pos_e = jnp.cumsum(slot_major, axis=1) - 1.0                # (G, k*g, E)
+    keep_e = (pos_e < cap) * slot_major
+    pos_e = pos_e.reshape(G, k, g, E).transpose(0, 2, 1, 3)     # (G, g, k, E)
+    keep_e = keep_e.reshape(G, k, g, E).transpose(0, 2, 1, 3)
+    # collapse the expert axis to per-choice scalars
+    pos = jnp.sum(pos_e * onehot, axis=-1).astype(jnp.int32)    # (G, g, k)
+    keep = jnp.sum(keep_e, axis=-1) > 0.5                       # (G, g, k)
+
+    frac_tokens = jnp.mean(jnp.sum(onehot, axis=2) / k, axis=1)
+    frac_probs = jnp.mean(probs, axis=1)
+    aux = E * jnp.mean(jnp.sum(frac_tokens * frac_probs, axis=-1))
+    return gate_vals, idx, keep, pos, cap, aux
+
+
+def _experts(cfg, p, xe):
+    """Dense expert FFN over dispatched activations xe (G, E, C, D)."""
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", xe, p["wg"])) \
+        * jnp.einsum("gecd,edf->gecf", xe, p["wu"])
+    return jnp.einsum("gecf,efd->gecd", h, p["wd"])
+
+
+def moe_apply_einsum(cfg, p, x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """GShard one-hot-einsum dispatch (reference; O(T*E*C*D) overhead)."""
+    B, S, D = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    T = B * S
+    g = _group_size(T)
+    G = T // g
+    xt = x.reshape(G, g, D)
+    gate_vals, idx, keep, pos, cap, aux = _route(cfg, p, xt)
+
+    e_oh = jax.nn.one_hot(idx, E, dtype=x.dtype)                # (G,g,k,E)
+    pos_oh = jax.nn.one_hot(pos, cap, dtype=x.dtype)            # (G,g,k,C)
+    keep_f = keep.astype(x.dtype)
+    dispatch = jnp.einsum("gtk,gtke,gtkc->gtec", keep_f, e_oh, pos_oh)
+    combine = jnp.einsum("gtk,gtk,gtke,gtkc->gtec",
+                         gate_vals.astype(x.dtype), keep_f, e_oh, pos_oh)
+    xe = jnp.einsum("gtec,gtd->gecd", dispatch, xt)             # (G,E,C,D)
+    ye = _experts(cfg, p, xe)
+    y = jnp.einsum("gtec,gecd->gtd", combine, ye)
+
+    out = y.reshape(B, S, D)
+    if cfg.moe_shared_expert:
+        out = out + layers.mlp_apply(cfg, p["shared"], x)
+    return out, aux
+
+
+def moe_apply(cfg, p, x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Scatter/gather dispatch (default): O(T*D) data movement, no one-hot
+    einsums — kills the ~50% dispatch-flop overhead and the replicated f32
+    (g, t, E, C) monsters the einsum form produced in backward (see
+    EXPERIMENTS.md §Perf, mixtral hillclimb iteration 1)."""
+    B, S, D = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    T = B * S
+    g = _group_size(T)
+    G = T // g
+    xt = constrain(x.reshape(G, g, D), "batch", None, None)
+    gate_vals, idx, keep, pos, cap, aux = _route(cfg, p, xt)
+
+    # flat slot index per (token, choice): expert*C + pos, dropped -> E*C
+    flat = jnp.where(keep, idx * cap + pos, E * cap)            # (G, g, k)
+    flat = constrain(flat, "batch", None, None)
+    xe_flat = constrain(jnp.zeros((G, E * cap + 1, D), x.dtype),
+                        "batch", None, None)
+    upd = jnp.broadcast_to(xt[:, :, None, :], (G, g, k, D))
+    xe_flat = xe_flat.at[
+        jnp.arange(G)[:, None, None], flat].add(upd, mode="drop")
+    xe_flat = constrain(xe_flat, "batch", None, None)
+    xe = xe_flat[:, :E * cap].reshape(G, E, cap, D)
+    # EP: dispatched activations shard on the expert axis when E divides it
+    # (this is the all-to-all boundary on llama4's 16-expert mesh axis)
+    xe = constrain(xe, None, "expert", None, None)
+    # name the dispatch boundary so the remat policy can pin it: recomputing
+    # xe in backward makes XLA all-gather activations for the expert-grad
+    # contraction (the 5.4 GB/layer monsters of §Perf mixtral iteration 1)
+    xe = checkpoint_name(xe, "moe_dispatch")
+
+    ye = _experts(cfg, p, xe)
+    ye = constrain(ye, None, "expert", None, None).reshape(G, E * cap, D)
+    ye = jnp.concatenate([ye, jnp.zeros((G, 1, D), ye.dtype)], axis=1)
+    ye = constrain(ye, "batch", None, None)
+    gathered = ye[jnp.arange(G)[:, None, None], flat]           # (G, g, k, D)
+    gathered = constrain(gathered, "batch", None, None, None)
+    y = jnp.sum(gathered * gate_vals[..., None].astype(x.dtype), axis=2)
+
+    out = y.reshape(B, S, D)
+    if cfg.moe_shared_expert:
+        out = out + layers.mlp_apply(cfg, p["shared"], x)
+    return out, aux

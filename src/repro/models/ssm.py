@@ -1,0 +1,212 @@
+"""Mamba2 / SSD (state-space duality) block, arXiv:2405.21060.
+
+Training/prefill uses the chunked dual form: within a chunk the recurrence
+is the quadratic "attention-like" form, across chunks a (B, H, P, N) state
+is carried by a ``lax.scan`` — sub-quadratic in sequence length and the
+reason the ssm/hybrid archs can run the ``long_500k`` cell.
+
+Decode is the O(1) recurrent update:  h <- exp(dt*A) h + dt * B ⊗ x.
+
+Heads share a single (B, C) group (n_groups = 1), matching mamba2-370m.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class SSMCache(NamedTuple):
+    conv: jnp.ndarray   # (B, W-1, conv_dim) rolling conv input window
+    state: jnp.ndarray  # (B, H, P, N) SSM state
+
+
+def ssm_dims(cfg):
+    d_inner = cfg.d_inner
+    n = cfg.ssm_state
+    heads = cfg.ssm_heads
+    conv_dim = d_inner + 2 * n           # conv over [x, B, C]
+    return d_inner, n, heads, conv_dim
+
+
+def ssm_init(cfg, key):
+    d = cfg.d_model
+    d_inner, n, heads, conv_dim = ssm_dims(cfg)
+    ks = jax.random.split(key, 7)
+    dt = jnp.dtype(cfg.dtype)
+    scale = 1.0 / math.sqrt(d)
+    # dt_bias: inverse-softplus of dt ~ U[1e-3, 1e-1]
+    u = jax.random.uniform(ks[2], (heads,), jnp.float32, 1e-3, 1e-1)
+    dt_bias = u + jnp.log(-jnp.expm1(-u))
+    # The canonical in_proj is split into z / xBC / dt projections so each
+    # output block shards cleanly on the model axis (TP-friendly).
+    return {
+        "wz": (jax.random.normal(ks[0], (d, d_inner), jnp.float32)
+               * scale).astype(dt),
+        "wxbc": (jax.random.normal(ks[5], (d, conv_dim), jnp.float32)
+                 * scale).astype(dt),
+        "wdt": (jax.random.normal(ks[6], (d, heads), jnp.float32)
+                * scale).astype(dt),
+        "conv_w": (jax.random.normal(ks[1], (cfg.conv_width, conv_dim),
+                                     jnp.float32) * 0.2).astype(dt),
+        "conv_b": jnp.zeros((conv_dim,), jnp.float32),
+        "A_log": jnp.log(jax.random.uniform(ks[3], (heads,), jnp.float32,
+                                            1.0, 16.0)),
+        "D": jnp.ones((heads,), jnp.float32),
+        "dt_bias": dt_bias,
+        "norm_w": jnp.ones((d_inner,), jnp.float32),
+        "out_proj": (jax.random.normal(ks[4], (d_inner, d), jnp.float32)
+                     * (1.0 / math.sqrt(d_inner))).astype(dt),
+    }
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv1d.  x: (B, S, C); w: (W, C)."""
+    W = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    for i in range(W):
+        out = out + xp[:, i:i + x.shape[1], :].astype(jnp.float32) * w[i]
+    return (out + b).astype(x.dtype)
+
+
+def _project(p, x):
+    return x @ p["wz"], x @ p["wxbc"], x @ p["wdt"]
+
+
+def _gated_out(cfg, p, y, z):
+    # Mamba2 gated RMSNorm: norm(y * silu(z)) then out_proj.
+    h = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    inv = jax.lax.rsqrt(jnp.mean(h * h, axis=-1, keepdims=True) + 1e-5)
+    h = (h * inv * p["norm_w"]).astype(p["out_proj"].dtype)
+    return h @ p["out_proj"]
+
+
+def ssd_chunked(x, B, C, dt, A_log, chunk: int):
+    """Chunked SSD scan.
+
+    x: (Bt, S, H, P); B, C: (Bt, S, N); dt: (Bt, S, H) (post-softplus).
+    Returns (y (Bt,S,H,P), final_state (Bt,H,P,N)).
+    """
+    Bt, S, H, P = x.shape
+    N = B.shape[-1]
+    Q = min(chunk, S)
+    while S % Q:
+        Q //= 2
+    nc = S // Q
+
+    A = -jnp.exp(A_log)                       # (H,) negative
+    a = dt * A                                # (Bt, S, H) log-decay per step
+
+    xc = x.reshape(Bt, nc, Q, H, P)
+    Bc = B.reshape(Bt, nc, Q, N).astype(jnp.float32)
+    Cc = C.reshape(Bt, nc, Q, N).astype(jnp.float32)
+    ac = a.reshape(Bt, nc, Q, H)
+    dtc = dt.reshape(Bt, nc, Q, H)
+
+    def step(state, inp):
+        xq, bq, cq, aq, dq = inp              # per-chunk slices
+        a_cum = jnp.cumsum(aq, axis=1)        # (Bt, Q, H)
+        # intra-chunk quadratic form
+        cb = jnp.einsum("bln,bsn->bls", cq, bq)                   # (Bt,Q,Q)
+        seg = a_cum[:, :, None, :] - a_cum[:, None, :, :]         # (Bt,l,s,H)
+        mask = jnp.tril(jnp.ones((Q, Q), bool))
+        # mask BEFORE exp: above-diagonal seg is large-positive and would
+        # overflow; where(mask, exp(seg), 0) then backprops inf*0 = NaN
+        decay = jnp.exp(jnp.where(mask[None, :, :, None], seg, -1e30))
+        scores = cb[..., None] * decay * dq[:, None, :, :]        # (Bt,l,s,H)
+        y_intra = jnp.einsum("blsh,bshp->blhp", scores,
+                             xq.astype(jnp.float32))
+        # inter-chunk contribution from the carried state
+        y_inter = jnp.exp(a_cum)[..., None] * jnp.einsum(
+            "bln,bhpn->blhp", cq, state)
+        # state update
+        tail = jnp.exp(a_cum[:, -1:, :] - a_cum)                  # (Bt,Q,H)
+        dB = (tail * dq)[..., None] * bq[:, :, None, :]           # (Bt,Q,H,N)
+        new_state = (jnp.exp(a_cum[:, -1, :])[:, :, None, None] * state
+                     + jnp.einsum("bshn,bshp->bhpn", dB,
+                                  xq.astype(jnp.float32)))
+        return new_state, (y_intra + y_inter).astype(x.dtype)
+
+    init = jnp.zeros((Bt, H, P, N), jnp.float32)
+    final, yc = jax.lax.scan(
+        step, init,
+        (xc.swapaxes(0, 1), Bc.swapaxes(0, 1), Cc.swapaxes(0, 1),
+         ac.swapaxes(0, 1), dtc.swapaxes(0, 1)))
+    y = yc.swapaxes(0, 1).reshape(Bt, S, H, P)
+    return y, final
+
+
+def ssm_apply(cfg, p, x: jnp.ndarray, with_cache: bool = False):
+    """Full-sequence (train/prefill) Mamba2 block.  x: (B, S, D).
+
+    with_cache=True additionally returns the decode cache (rolling conv
+    window tail + final SSD state) so prefill is a single pass.
+    """
+    d_inner, n, heads, _ = ssm_dims(cfg)
+    P = cfg.ssm_head_dim
+    z, xBC_raw, dt_raw = _project(p, x)
+    xBC = jax.nn.silu(_causal_conv(xBC_raw, p["conv_w"], p["conv_b"])
+                      .astype(jnp.float32)).astype(x.dtype)
+    xs = xBC[..., :d_inner]
+    Bm = xBC[..., d_inner:d_inner + n]
+    Cm = xBC[..., d_inner + n:]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    xh = xs.reshape(*xs.shape[:-1], heads, P)
+    from repro.models.layers import kernels_allowed
+    if (not with_cache and jax.default_backend() == "tpu"
+            and kernels_allowed() and xh.shape[1] % cfg.ssd_chunk == 0):
+        # TPU hot path: Pallas chunked-SSD kernel (forward-only contexts;
+        # the prefill path needs the final state and stays on the jnp form)
+        from repro.kernels.ssd_scan.ops import ssd_scan
+        y = ssd_scan(xh, Bm, Cm, dt, p["A_log"], cfg.ssd_chunk)
+        state = None
+    else:
+        y, state = ssd_chunked(xh, Bm, Cm, dt, p["A_log"], cfg.ssd_chunk)
+    y = y + p["D"][:, None] * xh.astype(jnp.float32)
+    y = y.reshape(*x.shape[:-1], d_inner)
+    out = _gated_out(cfg, p, y, z)
+    if with_cache:
+        tail = xBC_raw[:, -(cfg.conv_width - 1):, :]
+        return out, SSMCache(conv=tail, state=state)
+    return out
+
+
+def ssm_cache_init(cfg, batch: int, dtype) -> SSMCache:
+    d_inner, n, heads, conv_dim = ssm_dims(cfg)
+    return SSMCache(
+        conv=jnp.zeros((batch, cfg.conv_width - 1, conv_dim), dtype),
+        state=jnp.zeros((batch, heads, cfg.ssm_head_dim, n), jnp.float32),
+    )
+
+
+def ssm_decode(cfg, p, x: jnp.ndarray, cache: SSMCache
+               ) -> Tuple[jnp.ndarray, SSMCache]:
+    """One-token recurrent step.  x: (B, 1, D)."""
+    d_inner, n, heads, conv_dim = ssm_dims(cfg)
+    P = cfg.ssm_head_dim
+    z, xBC, dt_raw = _project(p, x)
+
+    window = jnp.concatenate([cache.conv, xBC], axis=1)     # (B, W, conv)
+    conv_out = jnp.einsum("bwc,wc->bc", window.astype(jnp.float32),
+                          p["conv_w"].astype(jnp.float32)) + p["conv_b"]
+    xBC = jax.nn.silu(conv_out)[:, None, :].astype(x.dtype)
+    new_conv = window[:, 1:, :]
+
+    xs = xBC[..., :d_inner]
+    Bm = xBC[..., d_inner:d_inner + n].astype(jnp.float32)   # (B,1,N)
+    Cm = xBC[..., d_inner + n:].astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B,1,H)
+    A = -jnp.exp(p["A_log"])
+    decay = jnp.exp(dt[:, 0, :] * A)                         # (B,H)
+    xh = xs.reshape(-1, heads, P).astype(jnp.float32)        # (B,H,P)
+    dBx = (dt[:, 0, :, None, None] * Bm[:, 0, None, None, :]
+           * xh[..., None])                                  # (B,H,P,N)
+    state = decay[..., None, None] * cache.state + dBx
+    y = jnp.einsum("bn,bhpn->bhp", Cm[:, 0], state)          # (B,H,P)
+    y = y + p["D"][:, None] * xh
+    y = y.reshape(x.shape[0], 1, d_inner)
+    out = _gated_out(cfg, p, y, z)
+    return out, SSMCache(conv=new_conv, state=state)

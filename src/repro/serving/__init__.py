@@ -1,0 +1,7 @@
+from repro.serving.engine import (  # noqa: F401
+    AdmissionPolicy,
+    EngineConfig,
+    EngineStats,
+    Request,
+    ServeEngine,
+)

@@ -1,0 +1,228 @@
+"""Continuous-batching serving engine whose admission control IS Flex.
+
+This is the paper's scenario re-instantiated for LLM inference:
+
+  node      -> inference replica (a model instance with a KV-token budget)
+  request r -> prompt_len + max_tokens the client DECLARES (over-estimated,
+               exactly like Google-trace resource requests)
+  usage L   -> prompt_len + tokens actually generated so far (the real,
+               growing KV footprint)
+  QoS q_j   -> request finishes without eviction
+  penalty P -> Alg. 3 feedback on the cluster QoS signal
+
+Two admission policies:
+  RESERVE (LeastFit-style baseline): admit only if the DECLARED footprints
+    of all co-resident requests fit the replica budget.
+  FLEX: admit if P * (measured usage) + reserved-this-round + r fits —
+    usage-based ULB placement with the estimation-penalty controller.
+
+When a replica overflows (demands exceed the budget), the most recently
+admitted requests are evicted and re-queued — the QoS violation that the
+controller reacts to.  Straggler mitigation: replicas report a step-time
+EMA; slow replicas are score-penalized so new work routes around them, and
+persistent stragglers can be drained.
+
+The engine is transport/model agnostic: ``decode_fn`` is any callable that
+advances each replica one decode step (the real-model driver in
+``launch/serve.py`` plugs a jitted model.decode in; unit tests use a stub).
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from collections import deque
+from typing import Callable, Deque, Dict, List, Optional
+
+import numpy as np
+
+from repro.core.types import ControllerState, FlexParams
+from repro.core.penalty import update_penalty
+
+
+class AdmissionPolicy(enum.Enum):
+    RESERVE = "reserve"   # request-based (baseline)
+    FLEX = "flex"         # usage-based + penalty feedback (the paper)
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt_len: int
+    max_tokens: int            # declared budget (the "request")
+    true_tokens: int           # actual generation length (hidden "demand")
+    generated: int = 0
+    replica: int = -1
+    evictions: int = 0
+    done: bool = False
+
+    @property
+    def declared_footprint(self) -> int:
+        return self.prompt_len + self.max_tokens
+
+    @property
+    def current_footprint(self) -> int:
+        return self.prompt_len + self.generated
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    n_replicas: int = 4
+    kv_budget_tokens: int = 8192       # per-replica KV capacity
+    policy: AdmissionPolicy = AdmissionPolicy.FLEX
+    max_active_per_replica: int = 64
+    straggler_weight: float = 0.5      # score penalty per unit slowdown
+    drain_slowdown: float = 3.0        # drain replicas this much slower
+    qos_target: float = 0.99
+
+
+@dataclasses.dataclass
+class EngineStats:
+    steps: int = 0
+    admitted: int = 0
+    finished: int = 0
+    evicted_events: int = 0
+    qos_series: List[float] = dataclasses.field(default_factory=list)
+    penalty_series: List[float] = dataclasses.field(default_factory=list)
+    util_series: List[float] = dataclasses.field(default_factory=list)
+    tokens_generated: int = 0
+
+
+class ServeEngine:
+    def __init__(self, cfg: EngineConfig,
+                 decode_fn: Optional[Callable[[int, List[Request]], float]]
+                 = None,
+                 flex_params: Optional[FlexParams] = None,
+                 seed: int = 0):
+        self.cfg = cfg
+        self.decode_fn = decode_fn or self._stub_decode
+        self.params = flex_params or FlexParams.default(
+            qos_target=cfg.qos_target)
+        self.ctrl = ControllerState.init(self.params)
+        self.queue: Deque[Request] = deque()
+        self.active: Dict[int, List[Request]] = {
+            i: [] for i in range(cfg.n_replicas)}
+        self.step_time_ema = np.ones(cfg.n_replicas)
+        self.reserved = np.zeros(cfg.n_replicas)   # this-round reservations
+        self.stats = EngineStats()
+        self._ever_violated: set = set()
+        self._rng = np.random.default_rng(seed)
+        self._usage_snap = np.zeros(cfg.n_replicas)
+        self._declared_snap = np.zeros(cfg.n_replicas)
+        # driver hooks (real-model serving wires prefill/KV surgery here)
+        self.on_admit: Optional[Callable[[Request], None]] = None
+        self.on_evict: Optional[Callable[[Request], None]] = None
+
+    # ---------------- admission (the Flex core) ----------------
+
+    def _usage(self) -> np.ndarray:
+        return np.array([sum(r.current_footprint for r in self.active[i])
+                         for i in range(self.cfg.n_replicas)], float)
+
+    def _declared(self) -> np.ndarray:
+        return np.array([sum(r.declared_footprint for r in self.active[i])
+                         for i in range(self.cfg.n_replicas)], float)
+
+    def _try_admit(self, req: Request) -> bool:
+        cfg = self.cfg
+        cap = float(cfg.kv_budget_tokens)
+        n_active = np.array([len(self.active[i])
+                             for i in range(cfg.n_replicas)], float)
+        # Load estimates are SNAPSHOTS from the round start (the paper's
+        # stale-measurement semantics): requests admitted this round are
+        # accounted via the reservation term only, never double-counted.
+        if cfg.policy is AdmissionPolicy.RESERVE:
+            load = self._declared_snap + self.reserved
+            fits = load + req.declared_footprint <= cap
+        else:
+            P = float(self.ctrl.penalty)
+            load = P * self._usage_snap + self.reserved
+            fits = load + req.declared_footprint <= cap
+        fits &= n_active < cfg.max_active_per_replica
+        if not fits.any():
+            return False
+        score = -(load / cap) - cfg.straggler_weight * (
+            self.step_time_ema / max(self.step_time_ema.mean(), 1e-9) - 1.0)
+        score[~fits] = -np.inf
+        i = int(np.argmax(score))
+        req.replica = i
+        self.active[i].append(req)
+        self.reserved[i] += req.declared_footprint
+        self.stats.admitted += 1
+        if self.on_admit is not None:
+            self.on_admit(req)
+        return True
+
+    # ---------------- decode + overflow handling ----------------
+
+    def _stub_decode(self, replica: int, reqs: List[Request]) -> float:
+        """Stand-in decode: advances counters; returns simulated step time."""
+        return 1.0 + 0.05 * len(reqs)
+
+    def _step_replica(self, i: int):
+        reqs = self.active[i]
+        if not reqs:
+            return
+        dt = self.decode_fn(i, reqs)
+        self.step_time_ema[i] = 0.8 * self.step_time_ema[i] + 0.2 * dt
+        for r in reqs:
+            if not r.done:
+                r.generated += 1
+                self.stats.tokens_generated += 1
+                if r.generated >= r.true_tokens:
+                    r.done = True
+        # overflow: real usage exceeded the budget -> evict newest first
+        usage = sum(r.current_footprint for r in reqs)
+        cap = self.cfg.kv_budget_tokens
+        while usage > cap and reqs:
+            victim = reqs.pop()           # LIFO: newest admission pays
+            usage -= victim.current_footprint
+            victim.evictions += 1
+            victim.replica = -1
+            victim.generated = 0          # restart (no KV migration)
+            victim.done = False
+            self._ever_violated.add(victim.rid)
+            self.stats.evicted_events += 1
+            if self.on_evict is not None:
+                self.on_evict(victim)
+            self.queue.appendleft(victim)
+        # retire finished
+        done = [r for r in reqs if r.done]
+        self.active[i] = [r for r in reqs if not r.done]
+        self.stats.finished += len(done)
+
+    # ---------------- main loop ----------------
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def step(self):
+        cfg = self.cfg
+        self.reserved[:] = 0.0
+        self._usage_snap = self._usage()
+        self._declared_snap = self._declared()
+        # admit as many queued requests as fit this round (ScheduleOne loop)
+        blocked = deque()
+        while self.queue:
+            req = self.queue.popleft()
+            if not self._try_admit(req):
+                blocked.append(req)
+        self.queue = blocked
+
+        for i in range(cfg.n_replicas):
+            self._step_replica(i)
+
+        # cluster QoS: active+finished requests that were never evicted
+        n_seen = max(self.stats.admitted, 1)
+        q = 1.0 - len(self._ever_violated) / n_seen
+        self.ctrl = update_penalty(self.ctrl, q, self.params)
+        self.stats.qos_series.append(float(q))
+        self.stats.penalty_series.append(float(self.ctrl.penalty))
+        self.stats.util_series.append(
+            float(self._usage().sum())
+            / (cfg.n_replicas * cfg.kv_budget_tokens))
+        self.stats.steps += 1
+
+    def run(self, steps: int):
+        for _ in range(steps):
+            self.step()
+        return self.stats

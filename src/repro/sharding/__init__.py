@@ -1,0 +1,6 @@
+from repro.sharding.api import (  # noqa: F401
+    constrain,
+    mesh_context,
+    set_mesh,
+)
+from repro.sharding.rules import param_specs, input_specs_sharding  # noqa: F401

@@ -1,0 +1,74 @@
+"""Context-scoped activation sharding constraints.
+
+Model code calls ``constrain(x, "batch", None, None)`` with *logical* axis
+names; when a mesh context is active the call lowers to
+``with_sharding_constraint`` using the context's logical->mesh mapping, and
+is the identity otherwise (CPU smoke tests run un-annotated).
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_tls = threading.local()
+
+
+def _axes_map(mesh: Mesh) -> dict:
+    names = mesh.axis_names
+    m = {"model": "model" if "model" in names else None,
+         "expert": "model" if "model" in names else None}
+    if "pod" in names:
+        m["batch"] = ("pod", "data")
+    elif "data" in names:
+        m["batch"] = "data"
+    else:
+        m["batch"] = None
+    m["data"] = "data" if "data" in names else None
+    return m
+
+
+def set_mesh(mesh: Optional[Mesh], *, shard_batch: bool = True) -> None:
+    _tls.mesh = mesh
+    _tls.shard_batch = shard_batch
+
+
+@contextlib.contextmanager
+def mesh_context(mesh: Optional[Mesh], *, shard_batch: bool = True):
+    prev = getattr(_tls, "mesh", None)
+    prev_sb = getattr(_tls, "shard_batch", True)
+    set_mesh(mesh, shard_batch=shard_batch)
+    try:
+        yield
+    finally:
+        set_mesh(prev, shard_batch=prev_sb)
+
+
+def constrain(x: jax.Array, *logical: Optional[str]) -> jax.Array:
+    mesh = getattr(_tls, "mesh", None)
+    if mesh is None:
+        return x
+    amap = _axes_map(mesh)
+    axes = []
+    for name, dim in zip(logical, x.shape):
+        phys = amap.get(name) if name else None
+        if phys is None:
+            axes.append(None)
+            continue
+        size = (mesh.shape[phys] if isinstance(phys, str)
+                else 1 if phys is None
+                else int.__mul__(*[mesh.shape[a] for a in phys])
+                if len(phys) == 2 else mesh.shape[phys[0]])
+        if name == "batch" and not getattr(_tls, "shard_batch", True):
+            axes.append(None)
+            continue
+        axes.append(phys if dim % size == 0 else None)
+    if all(a is None for a in axes):
+        # nothing shardable: constraining would FORCE replication (an
+        # all-gather), which is never what a no-op intent means
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*axes)))

@@ -1,0 +1,168 @@
+"""Name-based parameter / input sharding rules.
+
+Three modes:
+
+  * ``train``   — STORAGE layout (ZeRO-1): params/optimizer/grad-accumulator
+    2-D sharded (data x model) so optimizer state is ~12 bytes/param spread
+    over every chip.  Never used for compute.
+  * ``compute`` — what the forward/backward actually runs with: TP-only on
+    the model axis, contraction dims never sharded on ``data`` (that would
+    make GSPMD reshard activations every layer — measured 870 GB/device of
+    involuntary all-reduce on chatglm before this scheme, see EXPERIMENTS.md
+    §Perf).  The train step all-gathers storage->compute once per step and
+    reduce-scatters grads back per microbatch.
+  * ``serve``   — identical to compute (params replicated over data).
+
+MoE experts additionally spread the FFN dim over ``data`` (llama4's 16
+experts ride the 16-way model axis as true EP; mixtral's 8 can't, so its
+FFN dim spans model x data) — per-device expert weights stay O(total/256).
+
+Every rule is divisibility-guarded: a dim that does not divide its mesh axis
+stays replicated (e.g. granite's single KV head).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# leaf names whose OUTPUT dim is model-parallel
+_OUT_MODEL = {"wq", "wk", "wv", "wg", "wu", "w1", "wz", "wxbc", "wdt"}
+# leaf names whose INPUT dim is model-parallel
+_IN_MODEL = {"wo", "wd", "w2", "out_proj"}
+_EMBED = {"tok_emb"}
+_REPLICATED = {"router", "dec_pos_emb", "enc_pos_emb", "conv_b", "A_log",
+               "D", "dt_bias", "norm_w", "w", "b"}
+
+
+def _div(dim: int, mesh: Mesh, axis: Optional[str]) -> Optional[str]:
+    if axis is None or axis not in mesh.axis_names:
+        return None
+    return axis if dim % mesh.shape[axis] == 0 else None
+
+
+def _matrix_spec(mesh, shape, d_in_axis, d_out_axis):
+    return (_div(shape[0], mesh, d_in_axis), _div(shape[1], mesh, d_out_axis))
+
+
+def _div2(dim: int, mesh: Mesh, axes: tuple) -> Optional[tuple]:
+    size = 1
+    for a in axes:
+        if a not in mesh.axis_names:
+            return None
+        size *= mesh.shape[a]
+    return axes if dim % size == 0 else None
+
+
+def param_specs(params_tree: Any, mesh: Mesh, mode: str = "train"):
+    """Pytree of NamedSharding matching ``params_tree`` (arrays or structs)."""
+    fsdp = "data" if mode == "train" else None
+
+    def rule(path, leaf) -> NamedSharding:
+        name = None
+        for k in reversed(path):
+            if isinstance(k, jax.tree_util.DictKey):
+                name = str(k.key)
+                break
+        shape = leaf.shape
+        nd = len(shape)
+        # strip the stacked-layer leading axis for rule purposes
+        core = shape[1:] if nd >= 3 and name not in ("tok_emb", "lm_head",
+                                                     "dec_pos_emb",
+                                                     "enc_pos_emb") else shape
+        lead = (None,) * (nd - len(core))
+
+        if name in _REPLICATED or len(core) <= 1:
+            return NamedSharding(mesh, P(*([None] * nd)))
+        if name in _EMBED:
+            # vocab on model only: keeps logits vocab-sharded and avoids the
+            # full-logits all-reduce an FSDP-sharded d_model would induce.
+            return NamedSharding(mesh, P(_div(shape[0], mesh, "model"),
+                                         None))
+        if name == "lm_head":
+            return NamedSharding(mesh, P(None,
+                                         _div(shape[1], mesh, "model")))
+        if name == "conv_w":  # (L, W, conv_dim)
+            return NamedSharding(
+                mesh, P(*lead, None, _div(core[1], mesh, "model")))
+        if len(core) == 3:  # MoE experts (E, d_in, d_out)
+            E, di, do = core
+            ep = _div(E, mesh, "model")
+            # TRAIN-COMPUTE: pure EP when E rides the model axis (llama4
+            # 16e), else pure TP on the FFN dim (mixtral 8e) — one clean
+            # psum for wd's contraction, no replicated expert-grad monsters
+            # in backward.  STORAGE and SERVE (forward-only, no grad
+            # contractions) spread the FFN dim over the data axis too so
+            # per-device expert bytes stay O(total/chips).
+            if mode == "compute":
+                ffn_axes = () if ep else ("model",)
+            else:
+                ffn_axes = ("data",) if ep else ("model", "data")
+            if name in ("wg", "wu"):
+                return NamedSharding(
+                    mesh, P(*lead, ep, None,
+                            _div2(do, mesh, ffn_axes) if ffn_axes else None))
+            return NamedSharding(
+                mesh, P(*lead, ep,
+                        _div2(di, mesh, ffn_axes) if ffn_axes else None,
+                        None))
+        if len(core) == 2:
+            if name in _IN_MODEL:
+                s = _matrix_spec(mesh, core, "model", fsdp)
+            else:  # default: output-model (covers _OUT_MODEL)
+                s = _matrix_spec(mesh, core, fsdp, "model")
+            return NamedSharding(mesh, P(*lead, *s))
+        if len(core) == 4 and fsdp:  # stacked MoE without name match
+            return NamedSharding(mesh, P(*([None] * nd)))
+        return NamedSharding(mesh, P(*([None] * nd)))
+
+    return jax.tree_util.tree_map_with_path(rule, params_tree)
+
+
+def input_specs_sharding(inputs_tree: Any, mesh: Mesh):
+    """Shardings for step-function inputs (tokens/labels/frames/caches)."""
+    batch_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    batch_size = 1
+    for a in batch_axes:
+        batch_size *= mesh.shape[a]
+
+    def bdiv(dim):
+        return batch_axes if dim % batch_size == 0 else None
+
+    def rule(path, leaf) -> NamedSharding:
+        name = None
+        for k in reversed(path):
+            if isinstance(k, jax.tree_util.DictKey):
+                name = str(k.key)
+                break
+        shape = leaf.shape
+        if name in ("tokens", "labels"):
+            return NamedSharding(mesh, P(bdiv(shape[0]), None))
+        if name in ("frames", "patches"):
+            return NamedSharding(mesh, P(bdiv(shape[0]), None, None))
+        if name in ("k", "v", "xk", "xv", "shared"):  # (L|n_inv, B, S, KV, hd)
+            b = bdiv(shape[1])
+            kv = _div(shape[3], mesh, "model")
+            # When KV heads can't shard on the model axis (MQA/GQA with few
+            # heads), shard the SEQUENCE on it instead — flash-decode style
+            # sequence-parallel attention; GSPMD turns the softmax stats into
+            # small cross-shard collectives.  Batch==1 long-context decode
+            # additionally spreads the sequence over the data axis.
+            seq = None
+            if kv is None:
+                seq = _div(shape[2], mesh, "model")
+            elif b is None:
+                seq = _div(shape[2], mesh, "data")
+            return NamedSharding(mesh, P(None, b, seq, kv, None))
+        if name == "conv":  # (L, B, W-1, conv_dim)
+            return NamedSharding(
+                mesh, P(None, bdiv(shape[1]), None,
+                        _div(shape[3], mesh, "model")))
+        if name == "state":  # (L, B, H, P, N)
+            return NamedSharding(
+                mesh, P(None, bdiv(shape[1]), _div(shape[2], mesh, "model"),
+                        None, None))
+        return NamedSharding(mesh, P(*([None] * len(shape))))
+
+    return jax.tree_util.tree_map_with_path(rule, inputs_tree)

@@ -1,0 +1,8 @@
+from repro.traces.generator import (  # noqa: F401
+    TraceParams,
+    generate_calibrated,
+    generate_taskset,
+    n_tasks_for_offered_load,
+    scale_demand,
+)
+from repro.traces import analysis  # noqa: F401

@@ -1,0 +1,91 @@
+"""Trace analysis reproducing the paper's §2.2 (Figures 1-5).
+
+Each function returns plain numpy summaries suitable for the benchmark CSV
+outputs; all heavy lifting stays in jnp.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.types import SimResult, TaskSet
+
+_CLASS_NAMES = {0: "batch", 1: "production", 2: "system"}
+
+
+def cdf(x: jnp.ndarray, qs=(0.1, 0.25, 0.5, 0.75, 0.9, 0.99)) -> Dict[str, float]:
+    x = jnp.ravel(x)
+    return {f"p{int(q * 100)}": float(jnp.quantile(x, q)) for q in qs}
+
+
+def cluster_level(result: SimResult) -> Dict[str, float]:
+    """Fig. 1: total usage / total request vs. cluster capacity."""
+    m = result.metrics
+    return {
+        "avg_usage_cpu": float(jnp.mean(m.usage[:, 0])),
+        "avg_usage_mem": float(jnp.mean(m.usage[:, 1])),
+        "avg_request_cpu": float(jnp.mean(m.requested[:, 0])),
+        "avg_request_mem": float(jnp.mean(m.requested[:, 1])),
+    }
+
+
+def machine_level(result: SimResult) -> Dict[str, float]:
+    """Fig. 2/3: distribution of per-node usage over (node, slot) samples."""
+    u = result.metrics.node_usage  # (S, N, R)
+    out = {}
+    for r, name in ((0, "cpu"), (1, "mem")):
+        ratios = u[..., r]
+        out.update({f"usage_to_cap_{name}_{k}": v
+                    for k, v in cdf(ratios).items()})
+        out[f"frac_idle_{name}"] = float(jnp.mean(ratios < 0.01))
+        out[f"frac_below_half_{name}"] = float(jnp.mean(ratios < 0.5))
+    return out
+
+
+def task_level(ts: TaskSet) -> Dict[str, float]:
+    """Fig. 4/5: usage-vs-request statistics, overall and per class."""
+    out = {}
+    mean_ratio = ts.mean_usage / jnp.maximum(ts.request, 1e-6)
+    peak_ratio = ts.peak_usage / jnp.maximum(ts.request, 1e-6)
+    std_over_mean = ts.std_usage / jnp.maximum(ts.mean_usage, 1e-6)
+    for r, name in ((0, "cpu"), (1, "mem")):
+        out[f"mean_usage_over_request_{name}"] = float(jnp.mean(mean_ratio[:, r]))
+        out[f"peak_usage_over_request_{name}"] = float(jnp.mean(peak_ratio[:, r]))
+        out[f"std_over_mean_{name}"] = float(jnp.mean(std_over_mean[:, r]))
+        for cls in (0, 1, 2):
+            m = ts.priority == cls
+            denom = jnp.maximum(jnp.sum(m), 1)
+            out[f"{_CLASS_NAMES[cls]}_mean_ratio_{name}"] = float(
+                jnp.sum(jnp.where(m, mean_ratio[:, r], 0.0)) / denom)
+            out[f"{_CLASS_NAMES[cls]}_peak_ratio_{name}"] = float(
+                jnp.sum(jnp.where(m, peak_ratio[:, r], 0.0)) / denom)
+    return out
+
+
+def load_balance(result: SimResult) -> Dict[str, float]:
+    """Fig. 9: normalized std of per-node memory usage over time."""
+    m = result.metrics
+    norm_std = m.usage_std / jnp.maximum(m.usage_mean, 1e-6)
+    return {
+        "mean_norm_std_cpu": float(jnp.mean(norm_std[:, 0])),
+        "mean_norm_std_mem": float(jnp.mean(norm_std[:, 1])),
+    }
+
+
+def summarize(ts: TaskSet, result: SimResult, qos_target: float) -> Dict[str, float]:
+    """One-stop summary used by benchmarks (utilization, QoS, admission)."""
+    m = result.metrics
+    admitted = result.placement >= 0
+    out = {
+        **cluster_level(result),
+        **load_balance(result),
+        "qos_mean": float(jnp.mean(m.qos)),
+        "qos_violation_frac": float(jnp.mean((m.qos < qos_target))),
+        "admitted_frac": float(jnp.mean(admitted)),
+        "n_admitted": int(jnp.sum(admitted)),
+        "n_rejected": int(m.n_rejected[-1]),
+        "final_penalty": float(m.penalty[-1]),
+    }
+    return out

@@ -1,0 +1,7 @@
+from repro.train.optimizer import (  # noqa: F401
+    AdamWConfig,
+    AdamWState,
+    adamw_init,
+    adamw_update,
+)
+from repro.train.train_step import init_train_state, make_train_step  # noqa: F401

@@ -1,0 +1,126 @@
+"""Sharded, atomic, resharding-tolerant checkpoints.
+
+Layout:  <dir>/step_<N>/
+           metadata.json            tree structure, shapes, dtypes, extras
+           arr_<i>.npy              one file per leaf (np.save, mmap-able)
+         <dir>/step_<N>.tmp.<pid>   staging dir, os.rename'd into place
+
+Atomicity: the staging directory is renamed only after every leaf is
+fsync'd, so a preempted writer never leaves a half checkpoint that
+``latest_step`` would pick up.
+
+Elasticity: leaves are stored as FULL logical arrays (this container is
+single-process); ``restore`` re-lays them out onto ANY mesh via the provided
+sharding tree, so a job can restart with a different data-parallel width.
+On a real multi-host pod each process would write
+``arr_<i>.shard_<proc>.npy`` slices of its addressable shards — the format
+and metadata are designed for that extension (see DESIGN.md §7).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+from pathlib import Path
+from typing import Any, Optional
+
+import jax
+import ml_dtypes  # registers bfloat16 et al. with numpy  # noqa: F401
+import numpy as np
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return leaves, treedef
+
+
+def save(ckpt_dir: str | Path, step: int, tree: Any,
+         extra: Optional[dict] = None, keep: int = 3) -> Path:
+    ckpt_dir = Path(ckpt_dir)
+    ckpt_dir.mkdir(parents=True, exist_ok=True)
+    final = ckpt_dir / f"step_{step:08d}"
+    tmp = ckpt_dir / f"step_{step:08d}.tmp.{os.getpid()}"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir()
+
+    leaves, treedef = _flatten(tree)
+    meta = {
+        "step": step,
+        "treedef": str(treedef),
+        "n_leaves": len(leaves),
+        "leaves": [],
+        "extra": extra or {},
+    }
+    for i, leaf in enumerate(leaves):
+        arr = np.asarray(jax.device_get(leaf))
+        meta["leaves"].append({"shape": list(arr.shape),
+                               "dtype": str(arr.dtype)})
+        with open(tmp / f"arr_{i}.npy", "wb") as f:
+            np.save(f, arr)
+            f.flush()
+            os.fsync(f.fileno())
+    with open(tmp / "metadata.json", "w") as f:
+        json.dump(meta, f)
+        f.flush()
+        os.fsync(f.fileno())
+    if final.exists():
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+
+    # retention
+    steps = sorted(all_steps(ckpt_dir))
+    for s in steps[:-keep]:
+        shutil.rmtree(ckpt_dir / f"step_{s:08d}", ignore_errors=True)
+    return final
+
+
+def all_steps(ckpt_dir: str | Path):
+    ckpt_dir = Path(ckpt_dir)
+    out = []
+    if not ckpt_dir.exists():
+        return out
+    for p in ckpt_dir.iterdir():
+        if p.is_dir() and p.name.startswith("step_") and "tmp" not in p.name \
+                and (p / "metadata.json").exists():
+            out.append(int(p.name.split("_")[1]))
+    return sorted(out)
+
+
+def latest_step(ckpt_dir: str | Path) -> Optional[int]:
+    steps = all_steps(ckpt_dir)
+    return steps[-1] if steps else None
+
+
+def restore(ckpt_dir: str | Path, step: int, like: Any,
+            shardings: Any = None) -> Any:
+    """Restore into the structure of ``like`` (a pytree of arrays/structs).
+
+    ``shardings``: optional matching pytree of NamedSharding — arrays are
+    device_put with them, which is what makes restarts elastic across mesh
+    shapes.
+    """
+    path = Path(ckpt_dir) / f"step_{step:08d}"
+    meta = json.loads((path / "metadata.json").read_text())
+    like_leaves, treedef = _flatten(like)
+    if meta["n_leaves"] != len(like_leaves):
+        raise ValueError(
+            f"checkpoint has {meta['n_leaves']} leaves, expected "
+            f"{len(like_leaves)} — architecture mismatch?")
+    shard_leaves = (jax.tree_util.tree_flatten(shardings)[0]
+                    if shardings is not None else [None] * len(like_leaves))
+    out = []
+    for i, (ref, sh) in enumerate(zip(like_leaves, shard_leaves)):
+        arr = np.load(path / f"arr_{i}.npy")
+        if arr.dtype.kind == "V":  # bf16 etc. round-trip as void
+            arr = arr.view(np.dtype(meta["leaves"][i]["dtype"]))
+        if list(arr.shape) != list(ref.shape):
+            raise ValueError(f"leaf {i}: shape {arr.shape} != {ref.shape}")
+        out.append(jax.device_put(arr, sh) if sh is not None
+                   else jax.device_put(arr))
+    return jax.tree_util.tree_unflatten(treedef, out), meta
+
+
+def restore_extra(ckpt_dir: str | Path, step: int) -> dict:
+    path = Path(ckpt_dir) / f"step_{step:08d}"
+    return json.loads((path / "metadata.json").read_text())["extra"]

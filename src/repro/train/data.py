@@ -1,0 +1,54 @@
+"""Deterministic synthetic data pipeline.
+
+A seeded, stateless token stream: batch ``i`` is a pure function of
+(seed, i), so a restarted job that resumes from step k sees exactly the
+batches it would have seen — checkpoint/restart is bit-exact without
+persisting any pipeline state beyond the step counter.
+
+Tokens follow a Zipf-ish unigram distribution with a repeated-phrase
+structure, so cross-entropy has actual learnable signal (the integration
+test asserts the loss drops).
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterator
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+
+def synthetic_batch(cfg: ModelConfig, batch: int, seq: int, seed: int,
+                    index: int) -> Dict[str, jnp.ndarray]:
+    """Batch `index` of the stream (host numpy -> jnp)."""
+    rng = np.random.default_rng(np.uint64(seed * 1_000_003 + index))
+    V = cfg.vocab_size
+    # zipf-ish unigram over a smallish active vocab + copied phrases
+    active = min(V, 1024)
+    p = 1.0 / (np.arange(1, active + 1) ** 1.2)
+    p /= p.sum()
+    toks = rng.choice(active, size=(batch, seq + 1), p=p).astype(np.int32)
+    # inject structure: second half of each row repeats the first half
+    half = (seq + 1) // 2
+    toks[:, half:2 * half] = toks[:, :half]
+    out = {"tokens": jnp.asarray(toks[:, :-1]),
+           "labels": jnp.asarray(toks[:, 1:])}
+    if cfg.family == "encdec":
+        out["frames"] = jnp.asarray(
+            rng.normal(0, 1, (batch, cfg.enc_seq, cfg.d_model))
+            .astype(np.float32))
+    if cfg.family == "vlm":
+        out["patches"] = jnp.asarray(
+            rng.normal(0, 1, (batch, cfg.n_patches, cfg.d_model))
+            .astype(np.float32))
+    return out
+
+
+def stream(cfg: ModelConfig, batch: int, seq: int, seed: int = 0,
+           start_index: int = 0) -> Iterator[Dict[str, jnp.ndarray]]:
+    i = start_index
+    while True:
+        yield synthetic_batch(cfg, batch, seq, seed, i)
+        i += 1

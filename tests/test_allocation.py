@@ -1,0 +1,63 @@
+"""WFS allocator (paper §3): the three cases + conservation."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import wfs_allocate
+
+
+def alloc(demand, request, placement=None, n_nodes=1):
+    demand = jnp.asarray(demand, jnp.float32)
+    request = jnp.asarray(request, jnp.float32)
+    T = demand.shape[0]
+    pl = (jnp.zeros((T,), jnp.int32) if placement is None
+          else jnp.asarray(placement, jnp.int32))
+    active = jnp.ones((T,), bool)
+    a, node_usage = wfs_allocate(demand, request, pl, active, n_nodes)
+    return np.asarray(a), np.asarray(node_usage)
+
+
+def test_case1_demand_fits():
+    d = [[0.2, 0.1], [0.3, 0.2]]
+    r = [[0.5, 0.5], [0.1, 0.1]]
+    a, u = alloc(d, r)
+    np.testing.assert_allclose(a, d, atol=1e-5)
+
+
+def test_case2_requests_guaranteed():
+    # total demand > C, total request <= C: everyone gets min(d, r), the
+    # leftover splits by weighted fair share
+    d = [[0.8, 0.1], [0.7, 0.1]]
+    r = [[0.4, 0.2], [0.4, 0.2]]
+    a, u = alloc(d, r)
+    assert (a[:, 0] >= 0.4 - 1e-5).all()
+    assert u[0, 0] <= 1.0 + 1e-5
+    # symmetric tasks -> equal split of the excess
+    np.testing.assert_allclose(a[0], a[1], atol=1e-4)
+
+
+def test_case3_oversubscribed_requests():
+    d = [[0.9, 0.1], [0.9, 0.1], [0.9, 0.1]]
+    r = [[0.6, 0.2], [0.6, 0.2], [0.6, 0.2]]
+    a, u = alloc(d, r)
+    assert u[0, 0] <= 1.0 + 1e-4          # capacity respected
+    assert u[0, 0] >= 1.0 - 1e-3          # fully used (demand saturates)
+    np.testing.assert_allclose(a[:, 0], a[0, 0], atol=1e-4)
+
+
+def test_never_exceeds_demand():
+    rng = np.random.default_rng(0)
+    d = rng.uniform(0, 0.5, (20, 2)).astype(np.float32)
+    r = rng.uniform(0, 0.5, (20, 2)).astype(np.float32)
+    pl = rng.integers(0, 4, 20)
+    a, u = alloc(d, r, pl, n_nodes=4)
+    assert (a <= d + 1e-5).all()
+    assert (u <= 1.0 + 1e-4).all()
+
+
+def test_inactive_get_nothing():
+    d = jnp.asarray([[0.5, 0.5], [0.5, 0.5]], jnp.float32)
+    r = d
+    a, u = wfs_allocate(d, r, jnp.asarray([0, 0], jnp.int32),
+                        jnp.asarray([True, False]), 1)
+    assert float(a[1].sum()) == 0.0

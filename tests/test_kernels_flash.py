@@ -1,0 +1,44 @@
+"""Flash attention Pallas kernel vs jnp oracle: shape/dtype/mask sweeps."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels.flash_attention.flash_attention import flash_attention_bhsd
+from repro.kernels.flash_attention.ref import attention_ref
+
+CASES = [
+    # B, H, KV, S, hd, causal, window
+    (1, 4, 4, 128, 64, True, 0),
+    (2, 4, 2, 256, 64, True, 0),      # GQA
+    (1, 8, 1, 256, 128, True, 0),     # MQA
+    (2, 2, 2, 128, 32, False, 0),     # bidirectional (encoder)
+    (1, 4, 2, 512, 64, True, 128),    # sliding window
+    (1, 2, 2, 256, 80, True, 0),      # stablelm head_dim
+]
+
+
+@pytest.mark.parametrize("B,H,KV,S,hd,causal,window", CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_matches_oracle(B, H, KV, S, hd, causal, window, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(42), 3)
+    q = jax.random.normal(ks[0], (B, H, S, hd), dtype)
+    k = jax.random.normal(ks[1], (B, KV, S, hd), dtype)
+    v = jax.random.normal(ks[2], (B, KV, S, hd), dtype)
+    out = flash_attention_bhsd(q, k, v, causal=causal, window=window,
+                               block_q=64, block_k=64, interpret=True)
+    ref = attention_ref(q, k, v, causal=causal, window=window)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    assert jnp.max(jnp.abs(out.astype(jnp.float32)
+                           - ref.astype(jnp.float32))) < tol
+
+
+def test_block_shape_independence():
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (1, 2, 256, 64))
+    k = jax.random.normal(ks[1], (1, 2, 256, 64))
+    v = jax.random.normal(ks[2], (1, 2, 256, 64))
+    o1 = flash_attention_bhsd(q, k, v, block_q=64, block_k=64,
+                              interpret=True)
+    o2 = flash_attention_bhsd(q, k, v, block_q=128, block_k=256,
+                              interpret=True)
+    assert jnp.max(jnp.abs(o1 - o2)) < 1e-5

@@ -1,0 +1,35 @@
+"""flex_score kernel vs reference across load regimes, incl. no-fit."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels.flex_score.ops import flex_pick_node
+from repro.kernels.flex_score.ref import pick_node_ref
+
+
+@pytest.mark.parametrize("N,tile", [(256, 64), (1024, 256), (512, 512)])
+@pytest.mark.parametrize("scale", [0.2, 0.8, 3.0])
+def test_matches_ref(N, tile, scale):
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    est = jax.random.uniform(ks[0], (N, 2)) * scale
+    res = jax.random.uniform(ks[1], (N, 2)) * 0.05
+    src = jax.random.uniform(ks[2], (N,))
+    r = jnp.asarray([0.08, 0.1])
+    for P in (1.0, 2.0):
+        i_k, s_k, f_k = flex_pick_node(est, res, src, r, P, tile=tile,
+                                       interpret=True)
+        i_r, s_r, f_r = pick_node_ref(est, res, src, r, P, 1.0, 0.25)
+        assert bool(f_k) == bool(f_r)
+        if bool(f_r):
+            assert int(i_k) == int(i_r)
+            assert abs(float(s_k) - float(s_r)) < 1e-5
+        else:
+            assert int(i_k) == -1
+
+
+def test_all_infeasible_returns_minus_one():
+    est = jnp.ones((128, 2)) * 0.99
+    i, s, f = flex_pick_node(est, jnp.zeros((128, 2)), jnp.zeros((128,)),
+                             jnp.asarray([0.5, 0.5]), 1.0, tile=64,
+                             interpret=True)
+    assert int(i) == -1 and not bool(f)

@@ -1,0 +1,58 @@
+"""SSD scan kernel + jnp chunked form vs the sequential recurrence."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels.ssd_scan.ops import ssd_scan
+from repro.kernels.ssd_scan.ref import ssd_ref
+from repro.models.ssm import ssd_chunked
+
+CASES = [
+    # Bt, S, H, P, N, chunk
+    (2, 128, 4, 32, 16, 32),
+    (1, 256, 2, 64, 32, 64),
+    (2, 64, 8, 16, 8, 16),
+    (1, 128, 1, 128, 64, 128),   # single chunk == whole sequence
+]
+
+
+def _inputs(Bt, S, H, P, N, dtype=jnp.float32, seed=3):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    x = jax.random.normal(ks[0], (Bt, S, H, P), dtype)
+    B = jax.random.normal(ks[1], (Bt, S, N), dtype)
+    C = jax.random.normal(ks[2], (Bt, S, N), dtype)
+    dt = jax.nn.softplus(jax.random.normal(ks[3], (Bt, S, H))).astype(
+        jnp.float32)
+    A_log = jnp.log(jax.random.uniform(ks[4], (H,), minval=1.0, maxval=8.0))
+    return x, B, C, dt, A_log
+
+
+@pytest.mark.parametrize("Bt,S,H,P,N,chunk", CASES)
+def test_kernel_matches_recurrence(Bt, S, H, P, N, chunk):
+    x, B, C, dt, A_log = _inputs(Bt, S, H, P, N)
+    y_ref, _ = ssd_ref(x, B, C, dt, A_log)
+    y_ker = ssd_scan(x, B, C, dt, A_log, chunk=chunk, interpret=True)
+    assert jnp.max(jnp.abs(y_ker - y_ref)) < 5e-4
+
+
+@pytest.mark.parametrize("Bt,S,H,P,N,chunk", CASES[:2])
+def test_jnp_chunked_matches_recurrence(Bt, S, H, P, N, chunk):
+    x, B, C, dt, A_log = _inputs(Bt, S, H, P, N)
+    y_ref, st_ref = ssd_ref(x, B, C, dt, A_log)
+    y, st = ssd_chunked(x, B, C, dt, A_log, chunk)
+    assert jnp.max(jnp.abs(y - y_ref)) < 5e-4
+    assert jnp.max(jnp.abs(st - st_ref)) < 5e-4
+
+
+def test_chunk_size_invariance():
+    x, B, C, dt, A_log = _inputs(1, 128, 2, 16, 8)
+    y1, _ = ssd_chunked(x, B, C, dt, A_log, 16)
+    y2, _ = ssd_chunked(x, B, C, dt, A_log, 64)
+    assert jnp.max(jnp.abs(y1 - y2)) < 5e-4
+
+
+def test_bf16_inputs():
+    x, B, C, dt, A_log = _inputs(1, 64, 2, 16, 8, dtype=jnp.bfloat16)
+    y_ref, _ = ssd_ref(x, B, C, dt, A_log)
+    y = ssd_scan(x, B, C, dt, A_log, chunk=32, interpret=True)
+    assert jnp.max(jnp.abs(y.astype(jnp.float32) - y_ref)) < 0.15

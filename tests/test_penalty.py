@@ -1,0 +1,46 @@
+"""Unit tests for the estimation-penalty controller (Alg. 3)."""
+import jax.numpy as jnp
+
+from repro.core import ControllerState, FlexParams, update_penalty
+
+
+def mk(p, prev_q=1.0):
+    return ControllerState(penalty=jnp.asarray(p, jnp.float32),
+                           prev_qos=jnp.asarray(prev_q, jnp.float32))
+
+
+PARAMS = FlexParams.default(qos_target=0.99, alpha=0.9, beta=1.0,
+                            p_min=1.0, p_max=16.0)
+
+
+def test_decreases_when_healthy():
+    st = update_penalty(mk(2.0), 0.995, PARAMS)
+    assert abs(float(st.penalty) - 1.8) < 1e-6
+
+
+def test_floor_at_p_min():
+    st = mk(1.001)
+    for _ in range(100):
+        st = update_penalty(st, 1.0, PARAMS)
+    assert float(st.penalty) == 1.0
+
+
+def test_increases_only_when_degrading():
+    # violated but improving -> hold
+    st = update_penalty(mk(2.0, prev_q=0.90), 0.95, PARAMS)
+    assert abs(float(st.penalty) - 2.0) < 1e-6
+    # violated and degrading -> P + beta*(P-1)
+    st = update_penalty(mk(2.0, prev_q=0.98), 0.95, PARAMS)
+    assert abs(float(st.penalty) - 3.0) < 1e-6
+
+
+def test_cap_at_p_max():
+    st = mk(10.0, prev_q=0.99)
+    for q in (0.98, 0.97, 0.96, 0.95, 0.94):
+        st = update_penalty(st, q, PARAMS)
+    assert float(st.penalty) <= 16.0
+
+
+def test_prev_qos_tracked():
+    st = update_penalty(mk(2.0), 0.42, PARAMS)
+    assert abs(float(st.prev_qos) - 0.42) < 1e-6

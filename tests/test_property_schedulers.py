@@ -1,0 +1,66 @@
+"""Property tests: Theorems 4.1 / 4.2 and scheduler invariants."""
+import itertools
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import fifo_scheduler, lrf_scheduler
+
+
+@st.composite
+def instances(draw, max_n=5, max_j=12):
+    n = draw(st.integers(1, max_n))
+    j = draw(st.integers(1, max_j))
+    d = draw(st.lists(st.floats(0.01, 1.0), min_size=j, max_size=j))
+    return n, np.asarray(d, np.float32)
+
+
+@settings(max_examples=60, deadline=None)
+@given(instances())
+def test_fifo_2_approx(inst):
+    """Thm 4.1: FIFO max load <= 2 * OPT (via the LB max(mean, max))."""
+    n, d = inst
+    loads, _ = fifo_scheduler(jnp.zeros((n,)), jnp.asarray(d))
+    lb = max(d.sum() / n, d.max())
+    assert float(jnp.max(loads)) <= 2.0 * lb + 1e-5
+
+
+def _brute_opt(n, d):
+    best = np.inf
+    for assign in itertools.product(range(n), repeat=len(d)):
+        loads = np.zeros(n)
+        for task, node in zip(d, assign):
+            loads[node] += task
+        best = min(best, loads.max())
+    return best
+
+
+@settings(max_examples=25, deadline=None)
+@given(instances(max_n=3, max_j=7))
+def test_lrf_4_3_approx_vs_bruteforce(inst):
+    """Thm 4.2: LRF <= 4/3 * OPT when request order == demand order."""
+    n, d = inst
+    loads, _ = lrf_scheduler(jnp.zeros((n,)), jnp.asarray(d))
+    opt = _brute_opt(n, d)
+    assert float(jnp.max(loads)) <= 4.0 / 3.0 * opt + 1e-5
+
+
+@settings(max_examples=40, deadline=None)
+@given(instances())
+def test_all_work_conserved(inst):
+    n, d = inst
+    loads, assign = fifo_scheduler(jnp.zeros((n,)), jnp.asarray(d))
+    assert abs(float(jnp.sum(loads)) - float(d.sum())) < 1e-4
+    assert (np.asarray(assign) >= 0).all()
+
+
+@settings(max_examples=40, deadline=None)
+@given(instances(), st.floats(0.5, 2.0))
+def test_capacity_never_violated(inst, cap):
+    n, d = inst
+    loads, assign = fifo_scheduler(jnp.zeros((n,)), jnp.asarray(d), cap)
+    assert float(jnp.max(loads)) <= cap + 1e-5
+    # rejected tasks are exactly those that would not fit anywhere
+    assign = np.asarray(assign)
+    assert ((assign == -1) | (assign < n)).all()

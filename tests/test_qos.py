@@ -1,0 +1,31 @@
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import cluster_qos, task_qos, violation_fraction
+
+
+def test_task_qos_or_semantics():
+    # a >= d  OR  a >= r  (per resource)
+    alloc = jnp.asarray([[0.5, 0.5]])
+    assert bool(task_qos(alloc, jnp.asarray([[0.4, 0.4]]),
+                         jnp.asarray([[0.9, 0.9]]))[0])   # a >= d
+    assert bool(task_qos(alloc, jnp.asarray([[0.9, 0.9]]),
+                         jnp.asarray([[0.5, 0.5]]))[0])   # a >= r
+    assert not bool(task_qos(alloc, jnp.asarray([[0.9, 0.4]]),
+                             jnp.asarray([[0.6, 0.9]]))[0])
+
+
+def test_cluster_qos_over_active_only():
+    q = jnp.asarray([True, False, True, True])
+    active = jnp.asarray([True, True, False, True])
+    assert abs(float(cluster_qos(q, active)) - 2.0 / 3.0) < 1e-6
+
+
+def test_cluster_qos_idle_is_one():
+    q = jnp.asarray([False])
+    assert float(cluster_qos(q, jnp.asarray([False]))) == 1.0
+
+
+def test_violation_fraction():
+    series = jnp.asarray([1.0, 0.98, 1.0, 0.5])
+    assert abs(float(violation_fraction(series, 0.99)) - 0.5) < 1e-6

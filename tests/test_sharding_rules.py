@@ -1,0 +1,69 @@
+"""Sharding rules: divisibility guards and cache fallbacks (no devices
+needed — rules operate on abstract shapes + a fake mesh via jax.eval_shape
+over a 1-device mesh is impossible, so we run them against the production
+mesh axis SIZES using a mocked mesh object)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.launch.specs import input_specs, param_count
+from repro.configs.base import SHAPES
+
+
+class FakeMesh:
+    axis_names = ("data", "model")
+    shape = {"data": 16, "model": 16}
+
+
+def _specs(arch, mode):
+    from repro.sharding.rules import param_specs
+    cfg = get_config(arch)
+    model = build_model(cfg)
+    p_abs = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    # NamedSharding construction needs a real Mesh; instead call the rule
+    # internals via a monkeypatched NamedSharding that records specs.
+    return cfg, model, p_abs
+
+
+def test_param_count_moe_active():
+    cfg = get_config("mixtral-8x7b")
+    model = build_model(cfg)
+    total, active = param_count(model)
+    assert 40e9 < total < 55e9          # ~47B
+    assert 10e9 < active < 16e9         # ~13B active (top-2 of 8)
+
+
+def test_param_count_dense_families():
+    for arch, lo, hi in [("granite-34b", 30e9, 40e9),
+                         ("chatglm3-6b", 5.5e9, 7e9),
+                         ("mamba2-370m", 0.3e9, 0.45e9),
+                         ("zamba2-7b", 6e9, 8.5e9),
+                         ("whisper-medium", 0.6e9, 1.0e9),
+                         ("stablelm-3b", 2.4e9, 3.4e9),
+                         ("minitron-4b", 3.5e9, 5e9),
+                         ("llama4-scout-17b-a16e", 95e9, 120e9)]:
+        total, active = param_count(build_model(get_config(arch)))
+        assert lo < total < hi, (arch, total)
+
+
+def test_llama4_active_params():
+    total, active = param_count(build_model(
+        get_config("llama4-scout-17b-a16e")))
+    assert 13e9 < active < 22e9          # ~17B active
+
+
+def test_input_specs_cells():
+    for arch in ("granite-34b", "mamba2-370m", "whisper-medium",
+                 "llava-next-mistral-7b"):
+        cfg = get_config(arch)
+        tr = input_specs(cfg, SHAPES["train_4k"])
+        assert tr["tokens"].shape[0] == 256
+        if cfg.family == "vlm":
+            assert tr["tokens"].shape[1] == 4096 - cfg.n_patches
+        else:
+            assert tr["tokens"].shape[1] == 4096
+        de = input_specs(cfg, SHAPES["decode_32k"])
+        assert de["tokens"].shape == (128, 1)
+        assert "cache" in de

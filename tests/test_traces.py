@@ -1,0 +1,42 @@
+import numpy as np
+
+from repro.core.types import NUM_RESOURCES
+from repro.traces import (generate_calibrated, generate_taskset,
+                          scale_demand)
+from repro.traces.generator import TraceParams
+
+
+def test_shapes_and_ranges():
+    ts = generate_taskset(0, 500, 48)
+    assert ts.request.shape == (500, NUM_RESOURCES)
+    assert (np.asarray(ts.request) > 0).all()
+    assert (np.asarray(ts.request) <= 0.5 + 1e-6).all()
+    assert (np.asarray(ts.duration) >= 1).all()
+    assert (np.asarray(ts.arrival) < 48).all()
+
+
+def test_usage_request_gap_matches_paper():
+    ts = generate_taskset(0, 20000, 96)
+    ratio = np.asarray(ts.mean_usage) / np.asarray(ts.request)
+    # paper: mean usage ~45-50% of request
+    assert 0.35 < ratio.mean() < 0.65
+
+
+def test_calibration_hits_offered_load():
+    n_nodes, n_slots = 100, 96
+    ts = generate_calibrated(0, n_nodes, n_slots, offered_load=1.2)
+    arr = np.asarray(ts.arrival)
+    dur = np.asarray(ts.duration)
+    eff = np.minimum(dur, n_slots - arr)
+    realized = (np.asarray(ts.request).mean(1) * eff).sum() / (
+        n_nodes * n_slots)
+    assert abs(realized - 1.2) < 0.15
+
+
+def test_scale_demand_leaves_requests():
+    ts = generate_taskset(0, 100, 16)
+    ts2 = scale_demand(ts, 1.5)
+    np.testing.assert_array_equal(np.asarray(ts.request),
+                                  np.asarray(ts2.request))
+    assert np.asarray(ts2.mean_usage).mean() > np.asarray(
+        ts.mean_usage).mean()
