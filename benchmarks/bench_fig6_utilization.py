@@ -7,7 +7,9 @@ from benchmarks.common import QOS_TARGET, Row, figure_runs, summarize
 
 
 def run(full: bool):
-    cfg, ts, runs = figure_runs(full)
+    # record_node_usage so the cached runs are shared with fig9/trace
+    # (same lru_cache key; the (S,N,R) array is ~9 MB at paper scale)
+    cfg, ts, runs = figure_runs(full, record_node_usage=True)
     rows = []
     base = None
     for name, (res, wall) in runs.items():

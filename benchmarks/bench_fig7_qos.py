@@ -8,7 +8,8 @@ from benchmarks.common import QOS_TARGET, Row, figure_runs
 
 
 def run(full: bool):
-    cfg, ts, runs = figure_runs(full)
+    # record_node_usage so the cached runs are shared with fig6/fig9/trace
+    cfg, ts, runs = figure_runs(full, record_node_usage=True)
     rows = []
     for name, (res, wall) in runs.items():
         q = res.metrics.qos

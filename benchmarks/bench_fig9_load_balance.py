@@ -1,15 +1,24 @@
-"""Fig. 9: normalized std of per-node usage (lower = better balance)."""
+"""Fig. 9: normalized std of per-node usage (lower = better balance).
+
+Opts into ``SimConfig.record_node_usage`` for the per-node usage series so
+it can also report node-level memory percentiles (the aggregate std alone
+hides hot spots).
+"""
 from benchmarks.common import Row, figure_runs
 from repro.traces import analysis
 
 
 def run(full: bool):
-    cfg, ts, runs = figure_runs(full)
+    cfg, ts, runs = figure_runs(full, record_node_usage=True)
     rows = []
     for name, (res, wall) in runs.items():
         lb = analysis.load_balance(res)
+        mem = res.metrics.node_usage[..., 1]       # (S, N) per-node memory
+        pct = analysis.cdf(mem, qs=(0.5, 0.9, 0.99))
         rows.append(Row(f"fig9_{name}", wall * 1e6, {
             "norm_std_mem": lb["mean_norm_std_mem"],
             "norm_std_cpu": lb["mean_norm_std_cpu"],
+            "node_mem_p50": pct["p50"],
+            "node_mem_p99": pct["p99"],
         }))
     return rows

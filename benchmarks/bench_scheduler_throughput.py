@@ -1,19 +1,24 @@
 """Scheduler decision latency (paper §4.3: O(N/p), sub-second for thousands
 of nodes).  Times the jitted sequential ScheduleOne loop per decision and
-the vectorized filter+score primitive across node-table sizes."""
+the vectorized filter+score primitive across node-table sizes.
+
+The queue goes through the open-policy admission core (``schedule_queue``
+with a registry policy object), so new policies inherit this bench."""
 import time
 
 import jax
 import jax.numpy as jnp
 
 from benchmarks.common import Row
-from repro.core import FlexParams, NodeState, SchedulerKind, schedule_queue
+from repro.api import get_policy
+from repro.core import FlexParams, NodeState, schedule_queue
 from repro.kernels.flex_score.ref import pick_node_ref
 
 
 def run(full: bool):
     rows = []
     params = FlexParams.default()
+    policy = get_policy("flex-f")
     sizes = [1000, 4000, 16000] if not full else [4000, 16000, 64000]
     Q = 256
     key = jax.random.PRNGKey(0)
@@ -24,8 +29,7 @@ def run(full: bool):
         srcs = jnp.zeros((Q,), jnp.int32)
         valid = jnp.ones((Q,), bool)
         f = jax.jit(lambda nd: schedule_queue(
-            nd, reqs, srcs, valid, jnp.asarray(1.2), params,
-            SchedulerKind.FLEX_F))
+            nd, reqs, srcs, valid, jnp.asarray(1.2), params, policy))
         f(node)[1].block_until_ready()
         t0 = time.time()
         iters = 5

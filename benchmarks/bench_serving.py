@@ -5,8 +5,7 @@ import time
 import numpy as np
 
 from benchmarks.common import Row
-from repro.serving.engine import (AdmissionPolicy, EngineConfig, Request,
-                                  ServeEngine)
+from repro.serving.engine import EngineConfig, Request, ServeEngine
 
 
 def _workload(n, seed=0):
@@ -25,7 +24,7 @@ def run(full: bool):
     n_req = 2000 if full else 400
     steps = 300 if full else 150
     rows = []
-    for policy in (AdmissionPolicy.RESERVE, AdmissionPolicy.FLEX):
+    for policy in ("reserve", "flex"):
         cfg = EngineConfig(n_replicas=8, kv_budget_tokens=1024,
                            policy=policy, max_active_per_replica=64)
         eng = ServeEngine(cfg)
@@ -34,7 +33,7 @@ def run(full: bool):
         t0 = time.time()
         stats = eng.run(steps)
         us = (time.time() - t0) / steps * 1e6
-        rows.append(Row(f"serve_{policy.value}", us, {
+        rows.append(Row(f"serve_{policy}", us, {
             "finished": stats.finished,
             "mean_util": float(np.mean(stats.util_series)),
             "qos_final": stats.qos_series[-1],

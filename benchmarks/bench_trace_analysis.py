@@ -12,7 +12,8 @@ from repro.traces import analysis
 
 def run(full: bool):
     t0 = time.time()
-    cfg, ts, runs = figure_runs(full)
+    # machine_level needs the opt-in (S, N, R) per-node usage series
+    cfg, ts, runs = figure_runs(full, record_node_usage=True)
     res, _ = runs["leastfit"]
     task = analysis.task_level(ts)
     cluster = analysis.cluster_level(res)

@@ -3,6 +3,9 @@
 Every bench module exposes ``run(full: bool) -> list[Row]``; ``run.py``
 collects rows and prints ``name,us_per_call,derived`` CSV lines.
 
+Simulations go through the ``repro.api.Experiment`` front-end with registry
+policy names — one compiled XLA program per (policy, cluster) pair.
+
 Reduced mode (default) keeps the whole suite a few minutes on CPU; set
 REPRO_FULL=1 for paper-scale (4000 nodes / 24 h / ~700k tasks).
 """
@@ -15,7 +18,8 @@ from typing import Dict
 
 import jax
 
-from repro.core import FlexParams, SchedulerKind, SimConfig, run as sim_run
+from repro.api import Experiment
+from repro.core import SimConfig
 from repro.traces import analysis, generate_calibrated
 
 
@@ -41,29 +45,33 @@ def sim_setup(full: bool):
     return cfg, ts
 
 
+# bench label -> registry policy name (repro.api.list_policies()).
 METHODS = {
-    "leastfit": SchedulerKind.LEAST_FIT,
-    "oversub": SchedulerKind.OVERSUB,
-    "flexF": SchedulerKind.FLEX_F,
-    "flexL": SchedulerKind.FLEX_L,
+    "leastfit": "least-fit",
+    "oversub": "oversub",
+    "flexF": "flex-f",
+    "flexL": "flex-l",
 }
 
 
-@functools.lru_cache(maxsize=4)
+@functools.lru_cache(maxsize=8)
 def _cached_runs(full: bool, demand_scale: float = 1.0,
-                 n_nodes: int = 0, noise: float = 0.0):
-    """One simulation per scheduler, shared across figure benches."""
+                 n_nodes: int = 0, noise: float = 0.0,
+                 record_node_usage: bool = False):
+    """One simulation per policy, shared across figure benches."""
     cfg, ts = sim_setup(full)
     if n_nodes:
         cfg = cfg._replace(n_nodes=n_nodes)
     if demand_scale != 1.0:
         cfg = cfg._replace(demand_scale=demand_scale)
+    if record_node_usage:
+        # Opt into the O(S*N*R) per-node usage series (machine-level figs).
+        cfg = cfg._replace(record_node_usage=True)
     out = {}
-    for name, kind in METHODS.items():
-        params = FlexParams.default(
-            theta=2.0 if kind == SchedulerKind.OVERSUB else 1.0)
+    for name, policy in METHODS.items():
+        exp = Experiment(ts, cfg, policy=policy, est_noise_std=noise)
         t0 = time.time()
-        res = sim_run(ts, cfg, kind, params, est_noise_std=noise)
+        res = exp.run()
         jax.block_until_ready(res.metrics.qos)
         out[name] = (res, time.time() - t0)
     return cfg, ts, out

@@ -1,7 +1,9 @@
 """Paper-scale cluster simulation (Fig. 6-9 pipeline) with CSV output.
 
-Reduced by default; --full runs the 4000-node / 24 h / ~700k-task setup
-from the paper's §5.1 (several minutes on CPU).
+Runs every registered placement policy — the four paper schedulers plus
+the registry extensions (best-fit-usage, flex-priority) — through the
+``Experiment`` API.  Reduced by default; --full runs the 4000-node / 24 h /
+~700k-task setup from the paper's §5.1 (several minutes on CPU).
 
   PYTHONPATH=src python examples/cluster_sim.py [--full] [--out out.csv]
 """
@@ -9,8 +11,9 @@ import argparse
 import sys
 import time
 
-from repro.core import FlexParams, SchedulerKind, SimConfig, run
-from repro.traces import analysis, generate_calibrated
+from repro.api import Experiment, list_policies
+from repro.core import SimConfig
+from repro.traces import generate_calibrated
 
 
 def main():
@@ -18,6 +21,8 @@ def main():
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--out", default=None)
     ap.add_argument("--offered", type=float, default=1.6)
+    ap.add_argument("--policies", nargs="*", default=None,
+                    help="registry names (default: all registered)")
     args = ap.parse_args()
 
     if args.full:
@@ -31,13 +36,11 @@ def main():
           file=sys.stderr)
     lines = ["method,usage_cpu,usage_mem,request_cpu,admitted_frac,"
              "qos_mean,violation_frac,norm_std_mem,final_penalty,wall_s"]
-    for kind in SchedulerKind:
-        params = FlexParams.default(
-            theta=2.0 if kind == SchedulerKind.OVERSUB else 1.0)
+    for name in (args.policies or list_policies()):
         t0 = time.time()
-        s = analysis.summarize(ts, run(ts, cfg, kind, params), 0.99)
+        s = Experiment(ts, cfg, policy=name).summarize(0.99)
         lines.append(
-            f"{kind.name},{s['avg_usage_cpu']:.4f},{s['avg_usage_mem']:.4f},"
+            f"{name},{s['avg_usage_cpu']:.4f},{s['avg_usage_mem']:.4f},"
             f"{s['avg_request_cpu']:.4f},{s['admitted_frac']:.4f},"
             f"{s['qos_mean']:.4f},{s['qos_violation_frac']:.4f},"
             f"{s['mean_norm_std_mem']:.4f},{s['final_penalty']:.2f},"

@@ -1,15 +1,15 @@
 """Quickstart: reproduce the paper's headline result in ~1 minute on CPU.
 
-Runs the four schedulers (LeastFit, Oversub, FlexF, FlexL) on a reduced
-Google-trace-twin workload and prints the Fig. 6/7 summary: Flex matches
-Oversub's utilization at LeastFit's QoS.
+Runs the four schedulers (LeastFit, Oversub, FlexF, FlexL) through the
+``repro.api.Experiment`` front-end on a reduced Google-trace-twin workload
+and prints the Fig. 6/7 summary: Flex matches Oversub's utilization at
+LeastFit's QoS.
 
   PYTHONPATH=src python examples/quickstart.py
 """
-import jax
-
-from repro.core import FlexParams, SchedulerKind, SimConfig, run
-from repro.traces import analysis, generate_calibrated
+from repro.api import Experiment
+from repro.core import SimConfig
+from repro.traces import generate_calibrated
 
 
 def main():
@@ -18,26 +18,22 @@ def main():
     ts = generate_calibrated(0, cfg.n_nodes, cfg.n_slots, offered_load=1.6)
     print(f"cluster: {cfg.n_nodes} nodes x {cfg.n_slots} slots, "
           f"{ts.num_tasks} tasks (offered ~1.6x capacity)\n")
-    print(f"{'method':10s} {'util':>6s} {'admitted':>9s} {'QoS':>7s} "
+    print(f"{'method':14s} {'util':>6s} {'admitted':>9s} {'QoS':>7s} "
           f"{'viol%':>6s} {'final P':>8s}")
-    base = None
-    for kind in (SchedulerKind.LEAST_FIT, SchedulerKind.OVERSUB,
-                 SchedulerKind.FLEX_F, SchedulerKind.FLEX_L):
-        params = FlexParams.default(
-            theta=2.0 if kind == SchedulerKind.OVERSUB else 1.0)
-        s = analysis.summarize(ts, run(ts, cfg, kind, params), 0.99)
-        if kind == SchedulerKind.LEAST_FIT:
-            base = s
-        print(f"{kind.name:10s} {s['avg_usage_cpu']:6.3f} "
+    summaries = {}
+    for name in ("least-fit", "oversub", "flex-f", "flex-l"):
+        s = Experiment(ts, cfg, policy=name).summarize(0.99)
+        summaries[name] = s
+        print(f"{name:14s} {s['avg_usage_cpu']:6.3f} "
               f"{s['admitted_frac']:9.3f} {s['qos_mean']:7.4f} "
               f"{100 * s['qos_violation_frac']:6.1f} "
               f"{s['final_penalty']:8.2f}")
-    for kind in (SchedulerKind.FLEX_F,):
-        params = FlexParams.default()
-        s = analysis.summarize(ts, run(ts, cfg, kind, params), 0.99)
-        print(f"\nFlexF vs LeastFit: {s['avg_usage_cpu']/base['avg_usage_cpu']:.2f}x "
-              f"utilization, {s['avg_request_cpu']/base['avg_request_cpu']:.2f}x "
-              f"admitted requests  (paper: 1.6x / 1.74x)")
+    base, flex = summaries["least-fit"], summaries["flex-f"]
+    print(f"\nFlexF vs LeastFit: "
+          f"{flex['avg_usage_cpu'] / base['avg_usage_cpu']:.2f}x "
+          f"utilization, "
+          f"{flex['avg_request_cpu'] / base['avg_request_cpu']:.2f}x "
+          f"admitted requests  (paper: 1.6x / 1.74x)")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,141 @@
+"""The shared admission-control core (paper Alg. 3 ``ScheduleOne``).
+
+One set of filter/score primitives used by BOTH execution substrates:
+
+  * the discrete-time cluster simulator (`repro.core.simulator`) — jnp
+    arrays inside a traced ``lax.scan``;
+  * the continuous-batching serving engine (`repro.serving.engine`) —
+    eager numpy on a handful of replicas.
+
+Every helper is written against the array *methods / operators* shared by
+``numpy`` and ``jax.numpy`` (plus an explicit ``where`` dispatch), so the
+two paths cannot drift apart again: an admission rule is expressed once.
+
+Shapes are generic over the trailing resource axis: the simulator passes
+``(N, R)`` loads with an ``(R,)`` request, the engine passes ``(N, 1)``
+KV-token loads with a scalar request.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.types import FlexParams, NodeState, NUM_SRC_BUCKETS
+
+NEG_INF = -1e30
+
+
+def _xp(x):
+    """numpy for eager numpy inputs, jax.numpy otherwise."""
+    return np if isinstance(x, np.ndarray) else jnp
+
+
+# ---------------------------------------------------------------------------
+# Load models
+# ---------------------------------------------------------------------------
+
+def committed_load(requested, reserved):
+    """RLB load: resources promised to running + just-admitted tasks."""
+    return requested + reserved
+
+
+def usage_load(est_usage, reserved, penalty):
+    """ULB load (eq. 9): penalized estimate + this-round reservations."""
+    return penalty * est_usage + reserved
+
+
+# ---------------------------------------------------------------------------
+# Filter + score primitives
+# ---------------------------------------------------------------------------
+
+def fits(load, request, capacity):
+    """Capacity filter: ``load + request <= capacity`` on every resource.
+
+    load: (N, R); request: (R,) or scalar; capacity: scalar or broadcastable.
+    Returns (N,) bool.
+    """
+    return (load + request <= capacity).all(axis=-1)
+
+
+def dominant(load, capacity=None):
+    """Dominant-resource share of a multi-resource load: max over R."""
+    if capacity is not None:
+        load = load / capacity
+    return load.max(axis=-1)
+
+
+def least_loaded_score(load, capacity=None):
+    """Prefer the node whose dominant resource is least committed."""
+    return -dominant(load, capacity)
+
+
+def mask_infeasible(scores, feasible):
+    """Infeasible nodes can never win the argmax."""
+    xp = _xp(scores)
+    return xp.where(feasible, scores, NEG_INF)
+
+
+# ---------------------------------------------------------------------------
+# Traced admission step (simulator side)
+# ---------------------------------------------------------------------------
+
+class TaskView(NamedTuple):
+    """The slice of one task a placement policy may look at."""
+
+    request: jnp.ndarray    # (R,) f32 — declared resources r_j
+    src: jnp.ndarray        # ()   i32 — source hash bucket
+    priority: jnp.ndarray   # ()   i32 — CLASS_* priority
+
+
+class PolicyContext(NamedTuple):
+    """Cluster state a policy sees when placing one task."""
+
+    node: NodeState         # per-node aggregates (N leading axis)
+    penalty: jnp.ndarray    # () f32 — current estimation penalty P
+    params: FlexParams      # static algorithm parameters
+
+
+def admit_one(policy, ctx: PolicyContext, task: TaskView,
+              valid: jnp.ndarray):
+    """ScheduleOne: filter, score, place on argmax; -1 when nothing fits.
+
+    All state updates are O(1) scatters so a long ``lax.scan`` over a task
+    queue stays cheap (the O(N) filter/score reduction IS the algorithm).
+    Returns (new NodeState, node idx).
+    """
+    node = ctx.node
+    feasible = policy.feasible(ctx, task)
+    scores = mask_infeasible(policy.score(ctx, task), feasible)
+    ok = jnp.logical_and(jnp.any(feasible), valid)
+    idx = jnp.where(ok, jnp.argmax(scores).astype(jnp.int32), -1)
+
+    i = jnp.maximum(idx, 0)
+    okf = ok.astype(jnp.float32)
+    oki = ok.astype(jnp.int32)
+    new_node = NodeState(
+        est_usage=node.est_usage,
+        reserved=node.reserved.at[i].add(okf * task.request),
+        requested=node.requested.at[i].add(okf * task.request),
+        n_tasks=node.n_tasks.at[i].add(oki),
+        src_count=node.src_count.at[i, task.src].add(oki),
+    )
+    return new_node, idx
+
+
+def admit_queue(policy, node: NodeState, requests, srcs, priorities,
+                valid, penalty, params: FlexParams):
+    """Admit a padded queue of tasks sequentially (scan over admit_one).
+
+    requests: (Q, R); srcs/priorities/valid: (Q,).  Returns
+    (NodeState, placements (Q,) — node idx or -1).
+    """
+    import jax
+
+    def step(ns, xs):
+        r, src, prio, ok = xs
+        ctx = PolicyContext(node=ns, penalty=penalty, params=params)
+        return admit_one(policy, ctx, TaskView(r, src, prio), ok)
+
+    return jax.lax.scan(step, node, (requests, srcs, priorities, valid))

@@ -1,0 +1,246 @@
+"""Built-in policies, estimators and controllers (paper §4 + extensions).
+
+The four paper policies (LeastFit, Oversub, FlexF, FlexL) are expressed
+through the shared admission helpers with exactly the seed repo's math, so
+the ``SchedulerKind`` shim is numerically identical to the registry path.
+Two extra policies (``best-fit-usage``, ``flex-priority``) demonstrate the
+open registry: neither exists in the paper.
+
+All objects are frozen dataclasses — hashable, so each one can be a
+static ``jax.jit`` argument.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.api import admission
+from repro.api.admission import PolicyContext, TaskView
+from repro.api.registry import register_policy
+from repro.core import estimator as _est
+from repro.core import penalty as _penalty
+from repro.core.types import (
+    CLASS_PRODUCTION,
+    MEM,
+    ControllerState,
+    FlexParams,
+)
+
+
+def _flex_src_frac(ctx: PolicyContext, task: TaskView) -> jnp.ndarray:
+    """Fraction of a node's tasks sharing the incoming task's source.
+
+    Same-source tasks are likely to peak together (§4.3), so Flex scoring
+    spreads them.
+    """
+    node = ctx.node
+    return node.src_count[:, task.src].astype(jnp.float32) / (
+        jnp.maximum(node.n_tasks, 1).astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# Request-based policies (RLB, eq. 4-5)
+# ---------------------------------------------------------------------------
+
+@register_policy("least-fit")
+@dataclasses.dataclass(frozen=True)
+class LeastFitPolicy:
+    """Kubernetes-style LeastFit: request-based filter + least-requested score.
+
+    ``pin_theta`` pins the oversubscription factor regardless of the
+    caller's FlexParams (the paper baseline runs at theta = 1).
+    """
+
+    name = "least-fit"
+    pin_theta: float | None = 1.0
+    default_theta: float = 1.0
+
+    def prepare_params(self, params: FlexParams) -> FlexParams:
+        if self.pin_theta is None:
+            return params
+        return params._replace(
+            theta=jnp.asarray(self.pin_theta, jnp.float32))
+
+    def feasible(self, ctx: PolicyContext, task: TaskView) -> jnp.ndarray:
+        committed = admission.committed_load(ctx.node.requested,
+                                             ctx.node.reserved)
+        return admission.fits(committed, task.request, ctx.params.theta)
+
+    def score(self, ctx: PolicyContext, task: TaskView) -> jnp.ndarray:
+        committed = admission.committed_load(ctx.node.requested,
+                                             ctx.node.reserved)
+        return admission.least_loaded_score(committed, ctx.params.theta)
+
+
+@register_policy("oversub")
+@dataclasses.dataclass(frozen=True)
+class OversubPolicy(LeastFitPolicy):
+    """LeastFit with requests oversubscribed by theta (paper: 2.0).
+
+    theta is NOT pinned: it comes from FlexParams so sweeps can scan it.
+    """
+
+    name = "oversub"
+    pin_theta: float | None = None
+    default_theta: float = 2.0
+
+
+# ---------------------------------------------------------------------------
+# Usage-based policies (ULB, eq. 9 + Alg. 3)
+# ---------------------------------------------------------------------------
+
+@register_policy("flex-f")
+@dataclasses.dataclass(frozen=True)
+class FlexFifoPolicy:
+    """FlexF: penalized-usage filter, load + same-source score, FIFO queue."""
+
+    name = "flex-f"
+    pin_theta: float | None = 1.0
+    default_theta: float = 1.0
+
+    def prepare_params(self, params: FlexParams) -> FlexParams:
+        if self.pin_theta is None:
+            return params
+        return params._replace(
+            theta=jnp.asarray(self.pin_theta, jnp.float32))
+
+    def _load(self, ctx: PolicyContext) -> jnp.ndarray:
+        return admission.usage_load(ctx.node.est_usage, ctx.node.reserved,
+                                    ctx.penalty)
+
+    def feasible(self, ctx: PolicyContext, task: TaskView) -> jnp.ndarray:
+        return admission.fits(self._load(ctx), task.request, 1.0)
+
+    def score(self, ctx: PolicyContext, task: TaskView) -> jnp.ndarray:
+        load_term = admission.dominant(self._load(ctx))
+        src_frac = _flex_src_frac(ctx, task)
+        return -(ctx.params.w_load * load_term
+                 + ctx.params.w_src * src_frac)
+
+
+@register_policy("flex-l")
+@dataclasses.dataclass(frozen=True)
+class FlexLrfPolicy(FlexFifoPolicy):
+    """FlexL: FlexF scoring behind an LRF (largest memory request first)
+    priority queue (§4.3)."""
+
+    name = "flex-l"
+
+    def queue_order(self, requests: jnp.ndarray, priorities: jnp.ndarray,
+                    valid: jnp.ndarray) -> jnp.ndarray:
+        mem_req = jnp.where(valid, requests[:, MEM], -jnp.inf)
+        return jnp.argsort(-mem_req)
+
+
+@register_policy("best-fit-usage")
+@dataclasses.dataclass(frozen=True)
+class BestFitUsagePolicy(FlexFifoPolicy):
+    """Usage-based BEST fit: pack the fullest feasible node.
+
+    Consolidates load onto few nodes (the energy-aware packing objective
+    of e.g. Buyya et al.) at the cost of load balance — the mirror image
+    of Flex's least-loaded score, sharing its penalized-usage filter.
+    """
+
+    name = "best-fit-usage"
+
+    def score(self, ctx: PolicyContext, task: TaskView) -> jnp.ndarray:
+        return admission.dominant(self._load(ctx))
+
+
+@register_policy("flex-priority")
+@dataclasses.dataclass(frozen=True)
+class PriorityFlexPolicy(FlexFifoPolicy):
+    """Priority-class-aware Flex: protect CLASS_PRODUCTION tasks.
+
+    Production/system tasks see the full node capacity; batch tasks may
+    only fill nodes up to ``1 - headroom``, keeping slack for the demand
+    spikes of latency-sensitive tenants.  The queue is ordered
+    production-first (then LRF by memory within a class).
+    """
+
+    name = "flex-priority"
+    headroom: float = 0.1
+
+    def feasible(self, ctx: PolicyContext, task: TaskView) -> jnp.ndarray:
+        cap = jnp.where(task.priority >= CLASS_PRODUCTION,
+                        1.0, 1.0 - self.headroom)
+        return admission.fits(self._load(ctx), task.request, cap)
+
+    def queue_order(self, requests: jnp.ndarray, priorities: jnp.ndarray,
+                    valid: jnp.ndarray) -> jnp.ndarray:
+        is_prod = (priorities >= CLASS_PRODUCTION).astype(jnp.float32)
+        key = jnp.where(valid, 2.0 * is_prod + requests[:, MEM], -jnp.inf)
+        return jnp.argsort(-key)
+
+
+# ---------------------------------------------------------------------------
+# Estimators (protocol wrappers over repro.core.estimator)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class CurrentUsageEstimator:
+    """The paper's estimator: L-hat = measured current usage.
+
+    ``noise_std`` adds multiplicative measurement noise so tests and
+    benches can stress the penalty controller with a *bad* estimator.
+    """
+
+    noise_std: float = 0.0
+
+    def refresh(self, prev_est: jnp.ndarray, node_usage: jnp.ndarray,
+                key: jax.Array) -> jnp.ndarray:
+        return _est.current_usage(node_usage, key, self.noise_std)
+
+
+@dataclasses.dataclass(frozen=True)
+class EwmaEstimator:
+    """EWMA smoothing (the related work's standard choice)."""
+
+    decay: float = 0.7
+
+    def refresh(self, prev_est: jnp.ndarray, node_usage: jnp.ndarray,
+                key: jax.Array) -> jnp.ndarray:
+        return _est.ewma(prev_est, node_usage, self.decay)
+
+
+ESTIMATORS = {
+    "current": CurrentUsageEstimator,
+    "ewma": EwmaEstimator,
+}
+
+
+def resolve_estimator(est, noise_std: float = 0.0):
+    """str | Estimator -> Estimator (str honours the noise knob)."""
+    if isinstance(est, str):
+        if est == "current":
+            return CurrentUsageEstimator(noise_std=noise_std)
+        if noise_std:
+            raise ValueError(
+                f"est_noise_std is only supported by the 'current' "
+                f"estimator, not {est!r}; construct the estimator object "
+                f"yourself to combine noise with it")
+        return ESTIMATORS[est]()
+    if noise_std:
+        raise ValueError(
+            "est_noise_std is ignored when an Estimator object is passed; "
+            "set the noise on the object instead")
+    return est
+
+
+# ---------------------------------------------------------------------------
+# Penalty controllers
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class AimdPenaltyController:
+    """The paper's AIMD-style controller (Alg. 3 lines 19-25)."""
+
+    def init(self, params: FlexParams) -> ControllerState:
+        return ControllerState.init(params)
+
+    def update(self, ctrl: ControllerState, qos: jnp.ndarray,
+               params: FlexParams) -> ControllerState:
+        return _penalty.update_penalty(ctrl, qos, params)

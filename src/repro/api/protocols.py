@@ -1,0 +1,88 @@
+"""The three extension protocols of the Flex resource manager.
+
+Flex's admission loop is: *filter* feasible nodes, *score* survivors,
+place on the argmax, then *adjust* an estimation penalty from the QoS
+signal fed by a load *estimator*.  The paper evaluates four placement
+policies, one estimator and one controller — this module makes each role
+a first-class plug-in point instead of a baked-in branch.
+
+Implementations must be **hashable, immutable Python objects** (frozen
+dataclasses work well): they are passed to ``jax.jit`` as static
+arguments, so every distinct policy object compiles one specialized XLA
+program.  All array math inside the hooks must be traceable jnp code.
+"""
+from __future__ import annotations
+
+from typing import Protocol, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+
+from repro.api.admission import PolicyContext, TaskView
+from repro.core.types import ControllerState, FlexParams
+
+
+@runtime_checkable
+class PlacementPolicy(Protocol):
+    """Decides where one task goes: pure ``feasible`` + ``score`` hooks."""
+
+    name: str
+
+    def feasible(self, ctx: PolicyContext, task: TaskView) -> jnp.ndarray:
+        """(N,) bool — which nodes may legally take ``task``."""
+        ...
+
+    def score(self, ctx: PolicyContext, task: TaskView) -> jnp.ndarray:
+        """(N,) f32 — placement preference; argmax over feasible wins.
+
+        Return raw scores: the admission core masks infeasible nodes.
+        """
+        ...
+
+    # -- optional hooks (attribute-checked, so plain classes stay simple) --
+    #
+    # queue_order(requests (Q,R), priorities (Q,), valid (Q,)) -> (Q,) i32
+    #   permutation applied to the slot's scheduling queue (LRF-style
+    #   priority queues).  ``None``/missing means FIFO.
+    #
+    # prepare_params(params) -> params
+    #   normalize FlexParams before the run (e.g. pin theta for ULB
+    #   policies).  Missing means identity.
+    #
+    # default_theta: float — theta used when the caller passes no params.
+
+
+def policy_queue_order(policy):
+    """Return the policy's queue_order hook or None (FIFO)."""
+    return getattr(policy, "queue_order", None)
+
+
+def policy_prepare_params(policy, params: FlexParams) -> FlexParams:
+    prep = getattr(policy, "prepare_params", None)
+    return prep(params) if prep is not None else params
+
+
+def policy_default_params(policy) -> FlexParams:
+    return FlexParams.default(theta=getattr(policy, "default_theta", 1.0))
+
+
+@runtime_checkable
+class Estimator(Protocol):
+    """Produces the per-node load estimate L-hat the ULB filter consumes."""
+
+    def refresh(self, prev_est: jnp.ndarray, node_usage: jnp.ndarray,
+                key: jax.Array) -> jnp.ndarray:
+        """New (N, R) estimate from the previous one + fresh measurements."""
+        ...
+
+
+@runtime_checkable
+class PenaltyController(Protocol):
+    """Closes the QoS feedback loop by adapting the estimation penalty P."""
+
+    def init(self, params: FlexParams) -> ControllerState:
+        ...
+
+    def update(self, ctrl: ControllerState, qos: jnp.ndarray,
+               params: FlexParams) -> ControllerState:
+        ...

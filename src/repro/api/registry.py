@@ -1,0 +1,80 @@
+"""String registry for placement policies (and estimator shorthands).
+
+The registry maps names to zero-argument factories so that configuration
+surfaces (CLI flags, benchmark tables, YAML) can name policies without
+importing their classes:
+
+    @register_policy("my-policy")
+    class MyPolicy: ...
+
+    # or, for parameterized variants:
+    register_policy("my-policy-tight", lambda: MyPolicy(headroom=0.3))
+
+    policy = get_policy("my-policy")
+
+``resolve_policy`` additionally accepts a legacy ``SchedulerKind`` (the
+seed repo's closed enum) or an already-constructed policy object, so every
+historical call site funnels into the same open API.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, List
+
+from repro.core.types import SchedulerKind
+
+_POLICIES: Dict[str, Callable[[], object]] = {}
+
+# SchedulerKind -> registry name (the thin compatibility shim).
+KIND_TO_NAME = {
+    SchedulerKind.LEAST_FIT: "least-fit",
+    SchedulerKind.OVERSUB: "oversub",
+    SchedulerKind.FLEX_F: "flex-f",
+    SchedulerKind.FLEX_L: "flex-l",
+}
+
+
+def register_policy(name: str, factory: Callable[[], object] | None = None):
+    """Register a policy factory under ``name``.
+
+    Usable as a decorator on a policy class (zero-arg constructible) or
+    called directly with a factory/lambda.  Re-registering a name
+    overwrites it (last one wins), which keeps notebooks reloadable.
+    """
+    def _add(f):
+        _POLICIES[name] = f
+        return f
+
+    if factory is None:
+        return _add
+    return _add(factory)
+
+
+def _ensure_builtins():
+    # Built-in policies live in repro.api.policies; importing it populates
+    # the registry.  Lazy to keep registry import-light and cycle-free.
+    import repro.api.policies  # noqa: F401
+
+
+def get_policy(name: str):
+    """Instantiate the policy registered under ``name``."""
+    _ensure_builtins()
+    try:
+        return _POLICIES[name]()
+    except KeyError:
+        raise KeyError(
+            f"unknown policy {name!r}; registered: {sorted(_POLICIES)}"
+        ) from None
+
+
+def list_policies() -> List[str]:
+    _ensure_builtins()
+    return sorted(_POLICIES)
+
+
+def resolve_policy(policy):
+    """str | SchedulerKind | PlacementPolicy -> PlacementPolicy."""
+    if isinstance(policy, SchedulerKind):
+        return get_policy(KIND_TO_NAME[policy])
+    if isinstance(policy, str):
+        return get_policy(policy)
+    return policy

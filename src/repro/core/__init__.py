@@ -1,7 +1,11 @@
 """Flex core: usage-based load balancing with QoS feedback control."""
 from repro.core.types import (  # noqa: F401
+    CLASS_BATCH,
+    CLASS_PRODUCTION,
+    CLASS_SYSTEM,
     CPU,
     MEM,
+    NUM_CLASSES,
     NUM_RESOURCES,
     NUM_SRC_BUCKETS,
     ControllerState,

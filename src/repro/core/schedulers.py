@@ -1,14 +1,18 @@
-"""Placement policies (paper §4, Algorithms 1-3) as vectorized JAX programs.
+"""Placement entry points (paper §4, Algorithms 1-3) — legacy shim layer.
 
-The paper's ``ScheduleOne`` is: filter nodes by the capacity constraint,
-score the survivors, place on the argmax.  Filtering + scoring over all N
-nodes is embarrassingly parallel — the paper parallelizes it over p CPU
-threads (complexity O(N/p)); here it is a single fused VPU program (and a
-Pallas kernel in ``repro.kernels.flex_score`` for the TPU hot path).
+The actual admission loop lives in ``repro.api.admission`` (one shared
+filter/score core) and the policies in ``repro.api.policies`` (an open
+registry).  This module keeps the seed repo's function signatures working:
+``node_scores`` / ``place_task`` / ``schedule_queue`` accept either a
+``SchedulerKind`` (resolved through the registry shim) or any
+``PlacementPolicy`` object, and delegate to the shared core.
 
 Sequential semantics are preserved exactly: tasks are placed one at a time
 via ``lax.scan`` and every decision sees the previous placement's
 reservation, as in Kubernetes.
+
+The phase-1 single-resource schedulers (``fifo_scheduler`` /
+``lrf_scheduler``, Theorems 4.1-4.2) remain here as reference semantics.
 """
 from __future__ import annotations
 
@@ -17,13 +21,17 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.types import (
-    FlexParams,
-    NodeState,
-    SchedulerKind,
-)
+from repro.core.types import FlexParams, NodeState
 
 _NEG_INF = -1e30
+
+
+def _ctx_task(node, r_task, src_bucket, penalty, params):
+    from repro.api.admission import PolicyContext, TaskView
+    ctx = PolicyContext(node=node, penalty=penalty, params=params)
+    task = TaskView(request=r_task, src=src_bucket,
+                    priority=jnp.zeros((), jnp.int32))
+    return ctx, task
 
 
 def node_scores(
@@ -32,29 +40,20 @@ def node_scores(
     src_bucket: jnp.ndarray,    # () i32
     penalty: jnp.ndarray,       # () f32
     params: FlexParams,
-    kind: SchedulerKind,
+    kind,                       # SchedulerKind | registry name | policy
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Filter + score all nodes for one task.
 
     Returns (scores (N,), feasible (N,) bool).  Infeasible nodes get -inf.
     """
-    if kind in (SchedulerKind.LEAST_FIT, SchedulerKind.OVERSUB):
-        # Request-based: R_i + r_j <= theta * C    (RLB feasibility, eq. 4-5)
-        committed = node.requested + node.reserved            # (N, R)
-        feasible = jnp.all(committed + r_task <= params.theta, axis=-1)
-        # LeastFit: prefer the node with the least requested resource.
-        score = -jnp.max(committed / params.theta, axis=-1)
-    else:
-        # Usage-based (ULB, eq. 9): P * L_hat_i + reserved + r_j <= C.
-        load = penalty * node.est_usage + node.reserved        # (N, R)
-        feasible = jnp.all(load + r_task <= 1.0, axis=-1)
-        # Score (Alg. 3 line 9): prefer low load and few same-source tasks
-        # (same-source tasks are likely to peak together, §4.3).
-        load_term = jnp.max(load, axis=-1)                     # dominant resource
-        src_frac = node.src_count[:, src_bucket].astype(jnp.float32) / (
-            jnp.maximum(node.n_tasks, 1).astype(jnp.float32))
-        score = -(params.w_load * load_term + params.w_src * src_frac)
-    return jnp.where(feasible, score, _NEG_INF), feasible
+    from repro.api.admission import mask_infeasible
+    from repro.api.registry import resolve_policy
+
+    policy = resolve_policy(kind)
+    ctx, task = _ctx_task(node, r_task, src_bucket, penalty, params)
+    feasible = policy.feasible(ctx, task)
+    scores = mask_infeasible(policy.score(ctx, task), feasible)
+    return scores, feasible
 
 
 def place_task(
@@ -64,29 +63,15 @@ def place_task(
     valid: jnp.ndarray,         # () bool — False => no-op (padding entry)
     penalty: jnp.ndarray,
     params: FlexParams,
-    kind: SchedulerKind,
+    kind,
 ) -> Tuple[NodeState, jnp.ndarray]:
-    """ScheduleOne (Alg. 3): returns (new_state, node_idx); idx = -1 on failure.
+    """ScheduleOne (Alg. 3): returns (new_state, node_idx); idx = -1 on failure."""
+    from repro.api.admission import admit_one
+    from repro.api.registry import resolve_policy
 
-    All state updates are O(1) scatters so that a long ``lax.scan`` over a
-    task queue stays cheap (the O(N) part is the filter/score reduction,
-    which IS the algorithm).
-    """
-    scores, feasible = node_scores(node, r_task, src_bucket, penalty, params, kind)
-    ok = jnp.logical_and(jnp.any(feasible), valid)
-    idx = jnp.where(ok, jnp.argmax(scores).astype(jnp.int32), -1)
-
-    i = jnp.maximum(idx, 0)
-    okf = ok.astype(jnp.float32)
-    oki = ok.astype(jnp.int32)
-    new_node = NodeState(
-        est_usage=node.est_usage,
-        reserved=node.reserved.at[i].add(okf * r_task),
-        requested=node.requested.at[i].add(okf * r_task),
-        n_tasks=node.n_tasks.at[i].add(oki),
-        src_count=node.src_count.at[i, src_bucket].add(oki),
-    )
-    return new_node, idx
+    policy = resolve_policy(kind)
+    ctx, task = _ctx_task(node, r_task, src_bucket, penalty, params)
+    return admit_one(policy, ctx, task, valid)
 
 
 def schedule_queue(
@@ -96,16 +81,24 @@ def schedule_queue(
     valid: jnp.ndarray,        # (Q,) bool — False for padding entries
     penalty: jnp.ndarray,
     params: FlexParams,
-    kind: SchedulerKind,
+    kind,
+    priorities: jnp.ndarray | None = None,  # (Q,) i32; None = CLASS_BATCH
 ) -> Tuple[NodeState, jnp.ndarray]:
-    """Place a queue of tasks sequentially.  Returns (state, placements (Q,))."""
+    """Place a queue of tasks sequentially.  Returns (state, placements (Q,)).
 
-    def step(ns, xs):
-        r, src, ok = xs
-        return place_task(ns, r, src, ok, penalty, params, kind)
+    The queue is admitted IN THE ORDER GIVEN — a policy's ``queue_order``
+    hook is the caller's concern (the simulator applies it before calling
+    in).  Priority-aware policies (e.g. ``flex-priority``) need
+    ``priorities``; it defaults to all-batch when omitted.
+    """
+    from repro.api.admission import admit_queue
+    from repro.api.registry import resolve_policy
 
-    node, placements = jax.lax.scan(step, node, (requests, src_buckets, valid))
-    return node, placements
+    policy = resolve_policy(kind)
+    if priorities is None:
+        priorities = jnp.zeros_like(src_buckets)
+    return admit_queue(policy, node, requests, src_buckets, priorities,
+                       valid, penalty, params)
 
 
 # ---------------------------------------------------------------------------

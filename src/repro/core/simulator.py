@@ -5,31 +5,35 @@ JAX program: one ``lax.scan`` over 5-minute slots (the Google trace's usage
 sampling period), an inner ``lax.scan`` over the slot's scheduling queue.
 A 4000-node / 700k-task / 24-h evaluation is ONE compiled XLA program.
 
+Placement is pluggable: the simulator is generic over a
+``repro.api.PlacementPolicy`` object (plus an ``Estimator`` and a
+``PenaltyController``), all static jit arguments.  The legacy
+``SchedulerKind`` enum still works everywhere a policy is accepted — it is
+resolved through the registry shim (``repro.api.registry.KIND_TO_NAME``).
+
 Per-slot pipeline (semantics match Kubernetes + Alg. 3):
   1. recompute node aggregates from task lifetimes (handles task finishes)
   2. evolve each task's demand process (AR(1) around its mean, clipped at peak)
   3. run the WFS allocator -> realized usage per node, QoS q_j and Q(t)
   4. PeriodicEstimationPenaltyUpdate on the controller state
   5. refresh the load estimator, clear reservations
-  6. schedule retries + this slot's arrivals sequentially (FIFO or LRF order)
+  6. order the queue via the policy's queue_order hook (FIFO when absent)
+     and admit retries + this slot's arrivals sequentially
 """
 from __future__ import annotations
 
 import functools
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import allocation, estimator, penalty, qos, schedulers
+from repro.core import allocation, qos
 from repro.core.types import (
     NUM_RESOURCES,
     NUM_SRC_BUCKETS,
-    ControllerState,
     FlexParams,
     NodeState,
-    SchedulerKind,
     SimConfig,
     SimResult,
     SlotMetrics,
@@ -60,10 +64,6 @@ def build_arrival_table(arrival: np.ndarray, n_slots: int,
     return table
 
 
-class _Carry(tuple):
-    pass
-
-
 def _node_aggregates(ts: TaskSet, placement, admit_slot, slot, n_nodes):
     """Recompute per-node request/count/src aggregates for the active set."""
     placed = placement >= 0
@@ -82,31 +82,29 @@ def _node_aggregates(ts: TaskSet, placement, admit_slot, slot, n_nodes):
 
 @functools.partial(
     jax.jit,
-    static_argnames=("cfg", "kind", "estimator_kind", "est_noise_std"),
+    static_argnames=("cfg", "policy", "est", "ctrl_impl"),
 )
-def simulate(
+def simulate_core(
     ts: TaskSet,
     arrival_table: jnp.ndarray,   # (S, A) i32 from build_arrival_table
     cfg: SimConfig,
-    kind: SchedulerKind,
+    policy,                       # PlacementPolicy (hashable, static)
     params: FlexParams,
     key: jax.Array,
-    estimator_kind: str = "current",
-    est_noise_std: float = 0.0,
+    est,                          # Estimator (hashable, static)
+    ctrl_impl,                    # PenaltyController (hashable, static)
 ) -> SimResult:
+    from repro.api import admission
+    from repro.api.protocols import policy_queue_order
+
     n_nodes, n_slots = cfg.n_nodes, cfg.n_slots
     T = ts.num_tasks
     Qr = cfg.retry_capacity
-
-    if kind in (SchedulerKind.LEAST_FIT, SchedulerKind.FLEX_F,
-                SchedulerKind.FLEX_L):
-        params = params._replace(theta=jnp.asarray(1.0, jnp.float32))
-    elif kind == SchedulerKind.OVERSUB:
-        pass  # theta comes from params (paper: 2.0)
+    queue_order = policy_queue_order(policy)
 
     init = dict(
         node=NodeState.zeros(n_nodes),
-        ctrl=ControllerState.init(params),
+        ctrl=ctrl_impl.init(params),
         placement=jnp.full((T,), -1, jnp.int32),
         admit_slot=jnp.full((T,), -1, jnp.int32),
         attempts=jnp.zeros((T,), jnp.int32),
@@ -147,16 +145,12 @@ def simulate(
         active_cnt = carry["active_cnt"] + active.astype(jnp.int32)
 
         # --- 4. penalty controller ----------------------------------------
-        ctrl = penalty.update_penalty(carry["ctrl"], q_cluster, params)
+        ctrl = ctrl_impl.update(carry["ctrl"], q_cluster, params)
 
         # --- 5. estimator refresh ------------------------------------------
-        if estimator_kind == "ewma":
-            est = estimator.ewma(carry["node"].est_usage, node_usage)
-        else:
-            k_est = jax.random.fold_in(k_slot, 1)
-            est = estimator.current_usage(node_usage, k_est, est_noise_std)
+        k_est = jax.random.fold_in(k_slot, 1)
         node = NodeState(
-            est_usage=est,
+            est_usage=est.refresh(carry["node"].est_usage, node_usage, k_est),
             reserved=jnp.zeros_like(node_usage),
             requested=requested,
             n_tasks=n_tasks,
@@ -165,18 +159,18 @@ def simulate(
 
         # --- 6. scheduling: retries first, then new arrivals ---------------
         queue_ids = jnp.concatenate([carry["retry"], arrivals])       # (Qr+A,)
-        if kind == SchedulerKind.FLEX_L:
-            # LRF priority queue: largest MEMORY request first (§4.3).
-            mem_req = jnp.where(queue_ids >= 0,
-                                ts.request[jnp.maximum(queue_ids, 0), 1],
-                                -jnp.inf)
-            order = jnp.argsort(-mem_req)
+        if queue_order is not None:
+            # policy-defined priority queue (e.g. FlexL's LRF order, §4.3)
+            pre_valid = queue_ids >= 0
+            pre_qi = jnp.maximum(queue_ids, 0)
+            order = queue_order(ts.request[pre_qi], ts.priority[pre_qi],
+                                pre_valid)
             queue_ids = queue_ids[order]
         valid = queue_ids >= 0
         qi = jnp.maximum(queue_ids, 0)
-        node, placed_idx = schedulers.schedule_queue(
-            node, ts.request[qi], ts.src[qi], valid,
-            ctrl.penalty, params, kind)
+        node, placed_idx = admission.admit_queue(
+            policy, node, ts.request[qi], ts.src[qi], ts.priority[qi],
+            valid, ctrl.penalty, params)
 
         ok = valid & (placed_idx >= 0)
         # scatter placements (unique ids per slot; -1 slots write a no-op max)
@@ -208,7 +202,8 @@ def simulate(
             usage_mean=jnp.mean(node_usage, axis=0),
             n_running=jnp.sum(active.astype(jnp.int32)),
             n_rejected=n_rejected,
-            node_usage=node_usage,
+            node_usage=(node_usage if cfg.record_node_usage
+                        else jnp.zeros((0, NUM_RESOURCES), jnp.float32)),
         )
 
         new_carry = dict(
@@ -230,14 +225,45 @@ def simulate(
     )
 
 
-def run(ts: TaskSet, cfg: SimConfig, kind: SchedulerKind,
+def _resolve(policy, params, estimator, estimator_kind, est_noise_std,
+             controller):
+    """Normalize the open-API knobs into static jit arguments."""
+    from repro.api.policies import (AimdPenaltyController, resolve_estimator)
+    from repro.api.protocols import (policy_default_params,
+                                     policy_prepare_params)
+    from repro.api.registry import resolve_policy
+
+    policy = resolve_policy(policy)
+    if params is None:
+        params = policy_default_params(policy)
+    params = policy_prepare_params(policy, params)
+    est = resolve_estimator(estimator if estimator is not None
+                            else estimator_kind, est_noise_std)
+    ctrl_impl = controller if controller is not None else AimdPenaltyController()
+    return policy, params, est, ctrl_impl
+
+
+def simulate(ts: TaskSet, arrival_table: jnp.ndarray, cfg: SimConfig,
+             policy, params: FlexParams, key: jax.Array,
+             estimator_kind: str = "current", est_noise_std: float = 0.0,
+             estimator=None, controller=None) -> SimResult:
+    """Jitted simulation with policy/estimator/controller normalization.
+
+    ``policy`` may be a registry name, a ``SchedulerKind`` (legacy shim) or
+    a PlacementPolicy object; likewise ``estimator`` takes an object while
+    ``estimator_kind`` keeps the historical string knob working.
+    """
+    policy, params, est, ctrl_impl = _resolve(
+        policy, params, estimator, estimator_kind, est_noise_std, controller)
+    return simulate_core(ts, arrival_table, cfg, policy, params, key,
+                         est, ctrl_impl)
+
+
+def run(ts: TaskSet, cfg: SimConfig, policy,
         params: FlexParams | None = None, seed: int = 0,
         **kw) -> SimResult:
     """Convenience entry point: host-side table build + jitted simulate."""
-    if params is None:
-        params = FlexParams.default(
-            theta=2.0 if kind == SchedulerKind.OVERSUB else 1.0)
     table = build_arrival_table(np.asarray(ts.arrival), cfg.n_slots,
                                 cfg.arrivals_per_slot)
-    return simulate(ts, jnp.asarray(table), cfg, kind, params,
+    return simulate(ts, jnp.asarray(table), cfg, policy, params,
                     jax.random.PRNGKey(seed), **kw)

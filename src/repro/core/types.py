@@ -135,6 +135,7 @@ class SimConfig(NamedTuple):
     retry_capacity: int = 1024     # static retry-queue width
     wfs_iters: int = 4             # progressive-filling iterations for WFS
     demand_scale: float = 1.0      # §5.6 sensitivity knob (scales demand, not request)
+    record_node_usage: bool = False  # keep (S, N, R) per-node usage in SlotMetrics
 
 
 class SlotMetrics(NamedTuple):
@@ -148,7 +149,9 @@ class SlotMetrics(NamedTuple):
     usage_mean: jnp.ndarray   # (S, R) mean of per-node usage
     n_running: jnp.ndarray    # (S,) running tasks
     n_rejected: jnp.ndarray   # (S,) cumulative rejected tasks
-    node_usage: jnp.ndarray   # (S, N, R) per-node usage (machine-level analysis)
+    node_usage: jnp.ndarray   # (S, N, R) per-node usage (machine-level analysis);
+                              # (S, 0, R) unless SimConfig.record_node_usage —
+                              # the O(S*N*R) array is opt-in
 
 
 class SimResult(NamedTuple):

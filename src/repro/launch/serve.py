@@ -23,8 +23,7 @@ import numpy as np
 
 from repro.configs import get_smoke_config
 from repro.models.model import build_model, init_cache
-from repro.serving.engine import (AdmissionPolicy, EngineConfig, Request,
-                                  ServeEngine)
+from repro.serving.engine import EngineConfig, Request, ServeEngine
 
 
 class RealModelBackend:
@@ -130,8 +129,7 @@ def main():
                                max_seq=256)
     cfg = EngineConfig(
         n_replicas=args.replicas, kv_budget_tokens=args.budget,
-        policy=(AdmissionPolicy.FLEX if args.policy == "flex"
-                else AdmissionPolicy.RESERVE),
+        policy=args.policy,
         max_active_per_replica=args.slots)
     eng = ServeEngine(cfg, decode_fn=backend.decode_fn)
     eng.on_admit = backend.on_admit

@@ -10,11 +10,15 @@ This is the paper's scenario re-instantiated for LLM inference:
   QoS q_j   -> request finishes without eviction
   penalty P -> Alg. 3 feedback on the cluster QoS signal
 
-Two admission policies:
+Two admission policies (``EngineConfig.policy`` takes the enum or its
+string value):
   RESERVE (LeastFit-style baseline): admit only if the DECLARED footprints
     of all co-resident requests fit the replica budget.
   FLEX: admit if P * (measured usage) + reserved-this-round + r fits —
     usage-based ULB placement with the estimation-penalty controller.
+Both are expressed through ``repro.api.admission`` — the same filter/score
+core the discrete-time cluster simulator traces — so the serving engine and
+the simulator share one admission semantics.
 
 When a replica overflows (demands exceed the budget), the most recently
 admitted requests are evicted and re-queued — the QoS violation that the
@@ -35,6 +39,7 @@ from typing import Callable, Deque, Dict, List, Optional
 
 import numpy as np
 
+from repro.api import admission
 from repro.core.types import ControllerState, FlexParams
 from repro.core.penalty import update_penalty
 
@@ -68,7 +73,7 @@ class Request:
 class EngineConfig:
     n_replicas: int = 4
     kv_budget_tokens: int = 8192       # per-replica KV capacity
-    policy: AdmissionPolicy = AdmissionPolicy.FLEX
+    policy: "AdmissionPolicy | str" = AdmissionPolicy.FLEX
     max_active_per_replica: int = 64
     straggler_weight: float = 0.5      # score penalty per unit slowdown
     drain_slowdown: float = 3.0        # drain replicas this much slower
@@ -93,6 +98,8 @@ class ServeEngine:
                  = None,
                  flex_params: Optional[FlexParams] = None,
                  seed: int = 0):
+        if isinstance(cfg.policy, str):   # registry-style string config
+            cfg = dataclasses.replace(cfg, policy=AdmissionPolicy(cfg.policy))
         self.cfg = cfg
         self.decode_fn = decode_fn or self._stub_decode
         self.params = flex_params or FlexParams.default(
@@ -130,19 +137,24 @@ class ServeEngine:
         # Load estimates are SNAPSHOTS from the round start (the paper's
         # stale-measurement semantics): requests admitted this round are
         # accounted via the reservation term only, never double-counted.
+        # Filter + score run through repro.api.admission — the SAME core the
+        # discrete-time simulator traces; replicas are single-resource nodes
+        # ((N, 1) KV-token loads), so the two engines cannot drift apart.
         if cfg.policy is AdmissionPolicy.RESERVE:
-            load = self._declared_snap + self.reserved
-            fits = load + req.declared_footprint <= cap
+            load = admission.committed_load(self._declared_snap,
+                                            self.reserved)
         else:
-            P = float(self.ctrl.penalty)
-            load = P * self._usage_snap + self.reserved
-            fits = load + req.declared_footprint <= cap
-        fits &= n_active < cfg.max_active_per_replica
-        if not fits.any():
+            load = admission.usage_load(self._usage_snap, self.reserved,
+                                        float(self.ctrl.penalty))
+        feasible = admission.fits(load[:, None], req.declared_footprint, cap)
+        feasible &= n_active < cfg.max_active_per_replica
+        if not feasible.any():
             return False
-        score = -(load / cap) - cfg.straggler_weight * (
-            self.step_time_ema / max(self.step_time_ema.mean(), 1e-9) - 1.0)
-        score[~fits] = -np.inf
+        score = admission.least_loaded_score(load[:, None], cap) \
+            - cfg.straggler_weight * (
+                self.step_time_ema / max(self.step_time_ema.mean(), 1e-9)
+                - 1.0)
+        score = admission.mask_infeasible(score, feasible)
         i = int(np.argmax(score))
         req.replica = i
         self.active[i].append(req)

@@ -34,6 +34,10 @@ def cluster_level(result: SimResult) -> Dict[str, float]:
 def machine_level(result: SimResult) -> Dict[str, float]:
     """Fig. 2/3: distribution of per-node usage over (node, slot) samples."""
     u = result.metrics.node_usage  # (S, N, R)
+    if u.size == 0:
+        raise ValueError(
+            "machine_level needs per-node usage; run the simulation with "
+            "SimConfig(record_node_usage=True)")
     out = {}
     for r, name in ((0, "cpu"), (1, "mem")):
         ratios = u[..., r]

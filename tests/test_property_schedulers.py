@@ -1,9 +1,16 @@
-"""Property tests: Theorems 4.1 / 4.2 and scheduler invariants."""
+"""Property tests: Theorems 4.1 / 4.2 and scheduler invariants.
+
+Requires the optional ``hypothesis`` dev dependency; the whole module is
+skipped (never a collection error) when it is not installed.
+"""
 import itertools
 
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import fifo_scheduler, lrf_scheduler
 

@@ -7,7 +7,7 @@ from repro.core import SchedulerKind, SimConfig, run
 from repro.traces import analysis, generate_calibrated
 
 CFG = SimConfig(n_nodes=60, n_slots=32, arrivals_per_slot=256,
-                retry_capacity=64)
+                retry_capacity=64, record_node_usage=True)
 
 
 @pytest.fixture(scope="module")
