@@ -1,6 +1,15 @@
 """Scheduler decision latency (paper §4.3: O(N/p), sub-second for thousands
-of nodes).  Times the jitted sequential ScheduleOne loop per decision and
-the vectorized filter+score primitive across node-table sizes.
+of nodes).  Three sections:
+
+  * ``schedule_one_*``: the jitted sequential ScheduleOne loop per decision,
+    reference path vs the fused Pallas kernel path (``use_kernel=True``).
+  * ``flex_pick_*``: the single fused filter+score+argmax primitive, kernel
+    vs reference einsum, for N in {512, 2048, 8192} — each pair is parity-
+    asserted (same node index) before it is timed.
+  * On non-TPU backends the kernel rows run through the Pallas interpreter
+    (``mode=interpret`` in the derived column) — correct but not
+    representative of TPU latency; the reference rows are the honest CPU
+    numbers.
 
 The queue goes through the open-policy admission core (``schedule_queue``
 with a registry policy object), so new policies inherit this bench."""
@@ -12,13 +21,30 @@ import jax.numpy as jnp
 from benchmarks.common import Row
 from repro.api import get_policy
 from repro.core import FlexParams, NodeState, schedule_queue
+from repro.kernels.flex_score.ops import flex_pick_node
 from repro.kernels.flex_score.ref import pick_node_ref
+
+KERNEL_SIZES = [512, 2048, 8192]
+
+
+def _time(fn, *args, iters=5, warmup=1):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.time()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / iters * 1e6
 
 
 def run(full: bool):
     rows = []
     params = FlexParams.default()
     policy = get_policy("flex-f")
+    on_tpu = jax.default_backend() == "tpu"
+    interp = 0.0 if on_tpu else 1.0
+
+    # --- sequential ScheduleOne loop, reference vs kernel path ------------
     sizes = [1000, 4000, 16000] if not full else [4000, 16000, 64000]
     Q = 256
     key = jax.random.PRNGKey(0)
@@ -28,23 +54,50 @@ def run(full: bool):
         reqs = jax.random.uniform(key, (Q, 2)) * 0.1
         srcs = jnp.zeros((Q,), jnp.int32)
         valid = jnp.ones((Q,), bool)
-        f = jax.jit(lambda nd: schedule_queue(
-            nd, reqs, srcs, valid, jnp.asarray(1.2), params, policy))
-        f(node)[1].block_until_ready()
-        t0 = time.time()
-        iters = 5
-        for _ in range(iters):
-            f(node)[1].block_until_ready()
-        us = (time.time() - t0) / (iters * Q) * 1e6
+        pen = jnp.asarray(1.2)
+
+        f_ref = jax.jit(lambda nd: schedule_queue(
+            nd, reqs, srcs, valid, pen, params, policy))
+        us = _time(lambda nd: f_ref(nd)[1], node, iters=5) / Q
         rows.append(Row(f"schedule_one_n{n}", us,
                         {"nodes": n, "decisions_per_s": 1e6 / us}))
 
-        g = jax.jit(lambda e: pick_node_ref(
-            e, jnp.zeros_like(e), jnp.zeros((n,)), reqs[0], 1.2, 1.0, 0.25))
-        g(node.est_usage)[0].block_until_ready()
-        t0 = time.time()
-        for _ in range(50):
-            g(node.est_usage)[0].block_until_ready()
-        us2 = (time.time() - t0) / 50 * 1e6
-        rows.append(Row(f"filter_score_n{n}", us2, {"nodes": n}))
+        # kernel path only timed where it actually runs as a kernel (TPU)
+        # or as its interpreter build (anywhere) — the dispatch in
+        # flex_pick_node would silently fall back to the reference on
+        # plain CPU and time the same program twice.
+        f_ker = jax.jit(lambda nd: schedule_queue(
+            nd, reqs, srcs, valid, pen, params, policy,
+            use_kernel=True, interpret=not on_tpu))
+        us_k = _time(lambda nd: f_ker(nd)[1], node, iters=5) / Q
+        rows.append(Row(f"schedule_one_kernel_n{n}", us_k,
+                        {"nodes": n, "decisions_per_s": 1e6 / us_k,
+                         "interpret": interp}))
+
+    # --- fused filter+score primitive: kernel vs reference ---------------
+    for n in KERNEL_SIZES:
+        ks = jax.random.split(jax.random.PRNGKey(n), 3)
+        est = jax.random.uniform(ks[0], (n, 2)) * 0.6
+        res = jax.random.uniform(ks[1], (n, 2)) * 0.05
+        src = jax.random.uniform(ks[2], (n,))
+        r = jnp.asarray([0.08, 0.1])
+        pen = jnp.asarray(1.2)
+
+        g_ref = jax.jit(lambda e, rs, sf: pick_node_ref(
+            e, rs, sf, r, pen, 1.0, 0.25))
+        g_ker = jax.jit(lambda e, rs, sf: flex_pick_node(
+            e, rs, sf, r, pen, interpret=not on_tpu))
+
+        # parity gate: the two paths must agree before either is timed
+        i_ref = int(g_ref(est, res, src)[0])
+        i_ker = int(g_ker(est, res, src)[0])
+        assert i_ref == i_ker, (
+            f"kernel/reference disagree at N={n}: {i_ker} vs {i_ref}")
+
+        us_ref = _time(lambda: g_ref(est, res, src)[0], iters=50)
+        rows.append(Row(f"flex_pick_ref_n{n}", us_ref, {"nodes": n}))
+        us_ker = _time(lambda: g_ker(est, res, src)[0], iters=50)
+        rows.append(Row(f"flex_pick_kernel_n{n}", us_ker,
+                        {"nodes": n, "interpret": interp,
+                         "speedup_vs_ref": us_ref / us_ker}))
     return rows

@@ -1,0 +1,89 @@
+#!/usr/bin/env python
+"""Docs-drift guard: the registry and the docs must name the same policies.
+
+Fails (exit 1 / non-empty problem list) when:
+  * a policy registered in ``repro.api.registry`` is missing from the
+    registry table in ``docs/api.md`` — the failure mode this guards
+    against is PR-1's: two policies were added to the registry and the
+    docs table silently fell behind;
+  * a documented kernel-path checkmark disagrees with the policy's actual
+    ``kernel_inputs`` capability;
+  * a cross-linked docs file (``docs/kernels.md``) has gone missing.
+
+Run standalone (``python scripts/check_docs.py``) or through the tier-1
+test suite (``tests/test_docs.py`` imports and asserts ``problems()``).
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT / "src"))
+
+
+def _registry_table_rows(api_md: str) -> dict:
+    """Parse the 'Built-in registry' table: name -> kernel-path cell."""
+    rows = {}
+    in_section = False
+    for line in api_md.splitlines():
+        if line.startswith("## "):
+            in_section = line.strip() == "## Built-in registry"
+            continue
+        if not in_section:
+            continue
+        m = re.match(r"\|\s*`([^`]+)`\s*\|[^|]*\|([^|]*)\|", line)
+        if m:
+            rows[m.group(1)] = m.group(2).strip()
+    return rows
+
+
+def problems() -> list:
+    """Return a list of human-readable drift descriptions (empty = clean)."""
+    from repro.api import get_policy, list_policies, policy_supports_kernel
+
+    out = []
+    api_md_path = ROOT / "docs" / "api.md"
+    if not api_md_path.exists():
+        return [f"missing {api_md_path}"]
+    api_md = api_md_path.read_text()
+    if not (ROOT / "docs" / "kernels.md").exists():
+        out.append("docs/kernels.md is cross-linked from docs/api.md "
+                   "but does not exist")
+
+    table = _registry_table_rows(api_md)
+    for name in list_policies():
+        if name not in table:
+            out.append(
+                f"policy {name!r} is registered but missing from the "
+                f"'Built-in registry' table in docs/api.md")
+            continue
+        documented_kernel = "✓" in table[name]
+        actual_kernel = policy_supports_kernel(get_policy(name))
+        if documented_kernel != actual_kernel:
+            out.append(
+                f"policy {name!r}: docs/api.md kernel-path column says "
+                f"{'✓' if documented_kernel else '—'} but "
+                f"kernel_inputs hook is "
+                f"{'present' if actual_kernel else 'absent'}")
+    for name in table:
+        if name not in list_policies():
+            out.append(
+                f"docs/api.md registry table lists {name!r}, which is "
+                f"not registered")
+    return out
+
+
+def main() -> int:
+    probs = problems()
+    for p in probs:
+        print(f"docs drift: {p}", file=sys.stderr)
+    if not probs:
+        print("docs in sync with registry "
+              "(policies documented, kernel flags correct)")
+    return 1 if probs else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -14,6 +14,7 @@ vmaps whole studies into one XLA program.
 """
 from repro.api.admission import (  # noqa: F401
     NEG_INF,
+    KernelInputs,
     PolicyContext,
     TaskView,
     admit_one,
@@ -23,6 +24,7 @@ from repro.api.admission import (  # noqa: F401
     fits,
     least_loaded_score,
     mask_infeasible,
+    pick_node,
     usage_load,
 )
 from repro.api.protocols import (  # noqa: F401
@@ -32,6 +34,7 @@ from repro.api.protocols import (  # noqa: F401
     policy_default_params,
     policy_prepare_params,
     policy_queue_order,
+    policy_supports_kernel,
 )
 from repro.api.registry import (  # noqa: F401
     KIND_TO_NAME,

@@ -22,7 +22,7 @@ from typing import NamedTuple
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.types import FlexParams, NodeState, NUM_SRC_BUCKETS
+from repro.core.types import FlexParams, NodeState
 
 NEG_INF = -1e30
 
@@ -78,6 +78,33 @@ def mask_infeasible(scores, feasible):
 
 
 # ---------------------------------------------------------------------------
+# Kernel/policy contract (docs/kernels.md)
+# ---------------------------------------------------------------------------
+
+class KernelInputs(NamedTuple):
+    """What a policy hands the fused Pallas filter+score kernel.
+
+    A policy opts into the kernel path by exposing an optional
+    ``kernel_inputs(ctx, task) -> KernelInputs`` hook: the kernel then
+    evaluates feasibility ``all_R(penalty * est_usage + reserved + r <= cap)``
+    and score ``-(w_load * max_R(load) + w_src * src_frac)`` — the ULB
+    filter (eq. 9) + Flex score (§4.3) family.  Any policy whose math fits
+    that template (pick the scalars) gets the TPU hot path for free;
+    policies without the hook always take the reference ``feasible``/
+    ``score`` path.  All leaves may be traced values.
+    """
+
+    est_usage: jnp.ndarray   # (N, R) f32 — UNscaled load estimate L-hat
+                             # (the kernel multiplies by penalty itself)
+    reserved: jnp.ndarray    # (N, R) f32 — this-round reservations
+    src_frac: jnp.ndarray    # (N,)   f32 — same-source fraction per node
+    penalty: jnp.ndarray     # ()     f32 — estimation penalty P
+    cap: jnp.ndarray         # ()     f32 — per-resource capacity bound
+    w_load: jnp.ndarray      # ()     f32 — load-term score weight
+    w_src: jnp.ndarray       # ()     f32 — same-source score weight
+
+
+# ---------------------------------------------------------------------------
 # Traced admission step (simulator side)
 # ---------------------------------------------------------------------------
 
@@ -97,19 +124,54 @@ class PolicyContext(NamedTuple):
     params: FlexParams      # static algorithm parameters
 
 
+def pick_node(policy, ctx: PolicyContext, task: TaskView, *,
+              use_kernel: bool = False, interpret: bool = False):
+    """One fused filter+score+argmax decision (Alg. 3 lines 3-9).
+
+    The batched primitive behind ``admit_one``: reduces the whole node
+    table to a single candidate.  When ``use_kernel`` is set AND the policy
+    exposes the ``kernel_inputs`` hook (see ``KernelInputs``), the
+    reduction dispatches to the Pallas tile kernel
+    ``repro.kernels.flex_score.flex_pick_node`` (real Pallas on TPU or with
+    ``interpret=True``; reference einsum elsewhere).  Otherwise it runs the
+    policy's ``feasible``/``score`` hooks — the reference path.  Both
+    flags are Python bools resolved at trace time, so the choice costs
+    nothing inside ``jit``/``scan``.
+
+    Returns (idx, any_feasible): ``idx`` is the winning node or -1 when no
+    node is feasible.
+    """
+    kernel_inputs = getattr(policy, "kernel_inputs", None)
+    if use_kernel and kernel_inputs is not None:
+        from repro.kernels.flex_score.ops import flex_pick_node
+
+        ki = kernel_inputs(ctx, task)
+        idx, _, any_feasible = flex_pick_node(
+            ki.est_usage, ki.reserved, ki.src_frac, task.request, ki.penalty,
+            w_load=ki.w_load, w_src=ki.w_src, cap=ki.cap, interpret=interpret)
+        return idx, any_feasible
+    feasible = policy.feasible(ctx, task)
+    scores = mask_infeasible(policy.score(ctx, task), feasible)
+    any_feasible = jnp.any(feasible)
+    idx = jnp.where(any_feasible, jnp.argmax(scores), -1).astype(jnp.int32)
+    return idx, any_feasible
+
+
 def admit_one(policy, ctx: PolicyContext, task: TaskView,
-              valid: jnp.ndarray):
+              valid: jnp.ndarray, *, use_kernel: bool = False,
+              interpret: bool = False):
     """ScheduleOne: filter, score, place on argmax; -1 when nothing fits.
 
     All state updates are O(1) scatters so a long ``lax.scan`` over a task
-    queue stays cheap (the O(N) filter/score reduction IS the algorithm).
-    Returns (new NodeState, node idx).
+    queue stays cheap (the O(N) filter/score reduction IS the algorithm —
+    and it is the part ``use_kernel`` routes through the Pallas kernel,
+    see ``pick_node``).  Returns (new NodeState, node idx).
     """
     node = ctx.node
-    feasible = policy.feasible(ctx, task)
-    scores = mask_infeasible(policy.score(ctx, task), feasible)
-    ok = jnp.logical_and(jnp.any(feasible), valid)
-    idx = jnp.where(ok, jnp.argmax(scores).astype(jnp.int32), -1)
+    cand, any_feasible = pick_node(policy, ctx, task,
+                                   use_kernel=use_kernel, interpret=interpret)
+    ok = jnp.logical_and(any_feasible, valid)
+    idx = jnp.where(ok, cand, -1).astype(jnp.int32)
 
     i = jnp.maximum(idx, 0)
     okf = ok.astype(jnp.float32)
@@ -125,17 +187,21 @@ def admit_one(policy, ctx: PolicyContext, task: TaskView,
 
 
 def admit_queue(policy, node: NodeState, requests, srcs, priorities,
-                valid, penalty, params: FlexParams):
+                valid, penalty, params: FlexParams, *,
+                use_kernel: bool = False, interpret: bool = False):
     """Admit a padded queue of tasks sequentially (scan over admit_one).
 
-    requests: (Q, R); srcs/priorities/valid: (Q,).  Returns
-    (NodeState, placements (Q,) — node idx or -1).
+    requests: (Q, R); srcs/priorities/valid: (Q,).  With ``use_kernel``
+    every decision in the scan body is one fused kernel call (policies
+    without the ``kernel_inputs`` hook silently keep the reference path).
+    Returns (NodeState, placements (Q,) — node idx or -1).
     """
     import jax
 
     def step(ns, xs):
         r, src, prio, ok = xs
         ctx = PolicyContext(node=ns, penalty=penalty, params=params)
-        return admit_one(policy, ctx, TaskView(r, src, prio), ok)
+        return admit_one(policy, ctx, TaskView(r, src, prio), ok,
+                         use_kernel=use_kernel, interpret=interpret)
 
     return jax.lax.scan(step, node, (requests, srcs, priorities, valid))

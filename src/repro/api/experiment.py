@@ -80,7 +80,8 @@ class Experiment:
 
         Returns a SimResult whose leaves carry [sweep, [seed,]] leading axes.
         """
-        single_seed = not isinstance(seeds, (Sequence, range, np.ndarray))
+        single_seed = not isinstance(seeds,
+                                     (Sequence, range, np.ndarray, jax.Array))
         seed_list = [seeds] if single_seed else list(seeds)
         keys = jnp.stack([jax.random.PRNGKey(int(s)) for s in seed_list])
 

@@ -119,6 +119,20 @@ class FlexFifoPolicy:
         return -(ctx.params.w_load * load_term
                  + ctx.params.w_src * src_frac)
 
+    def kernel_inputs(self, ctx: PolicyContext,
+                      task: TaskView) -> admission.KernelInputs:
+        """Fused-kernel mapping of the ULB filter + Flex score
+        (docs/kernels.md); numerically identical to feasible+score."""
+        return admission.KernelInputs(
+            est_usage=ctx.node.est_usage,
+            reserved=ctx.node.reserved,
+            src_frac=_flex_src_frac(ctx, task),
+            penalty=ctx.penalty,
+            cap=jnp.asarray(1.0, jnp.float32),
+            w_load=ctx.params.w_load,
+            w_src=ctx.params.w_src,
+        )
+
 
 @register_policy("flex-l")
 @dataclasses.dataclass(frozen=True)
@@ -149,6 +163,14 @@ class BestFitUsagePolicy(FlexFifoPolicy):
     def score(self, ctx: PolicyContext, task: TaskView) -> jnp.ndarray:
         return admission.dominant(self._load(ctx))
 
+    def kernel_inputs(self, ctx: PolicyContext,
+                      task: TaskView) -> admission.KernelInputs:
+        # The kernel score -(w_load * max(load) + w_src * src) with
+        # w_load = -1, w_src = 0 is exactly +dominant(load): best fit.
+        return super().kernel_inputs(ctx, task)._replace(
+            w_load=jnp.asarray(-1.0, jnp.float32),
+            w_src=jnp.asarray(0.0, jnp.float32))
+
 
 @register_policy("flex-priority")
 @dataclasses.dataclass(frozen=True)
@@ -165,9 +187,17 @@ class PriorityFlexPolicy(FlexFifoPolicy):
     headroom: float = 0.1
 
     def feasible(self, ctx: PolicyContext, task: TaskView) -> jnp.ndarray:
-        cap = jnp.where(task.priority >= CLASS_PRODUCTION,
-                        1.0, 1.0 - self.headroom)
-        return admission.fits(self._load(ctx), task.request, cap)
+        return admission.fits(self._load(ctx), task.request, self._cap(task))
+
+    def _cap(self, task: TaskView) -> jnp.ndarray:
+        return jnp.where(task.priority >= CLASS_PRODUCTION,
+                         1.0, 1.0 - self.headroom)
+
+    def kernel_inputs(self, ctx: PolicyContext,
+                      task: TaskView) -> admission.KernelInputs:
+        # Priority-dependent capacity rides in the kernel's task vector.
+        return super().kernel_inputs(ctx, task)._replace(
+            cap=self._cap(task).astype(jnp.float32))
 
     def queue_order(self, requests: jnp.ndarray, priorities: jnp.ndarray,
                     valid: jnp.ndarray) -> jnp.ndarray:
@@ -222,7 +252,12 @@ def resolve_estimator(est, noise_std: float = 0.0):
                 f"est_noise_std is only supported by the 'current' "
                 f"estimator, not {est!r}; construct the estimator object "
                 f"yourself to combine noise with it")
-        return ESTIMATORS[est]()
+        try:
+            return ESTIMATORS[est]()
+        except KeyError:
+            raise KeyError(
+                f"unknown estimator {est!r}; "
+                f"registered: {sorted(ESTIMATORS)}") from None
     if noise_std:
         raise ValueError(
             "est_noise_std is ignored when an Estimator object is passed; "

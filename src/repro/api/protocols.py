@@ -50,11 +50,24 @@ class PlacementPolicy(Protocol):
     #   policies).  Missing means identity.
     #
     # default_theta: float — theta used when the caller passes no params.
+    #
+    # kernel_inputs(ctx, task) -> repro.api.admission.KernelInputs
+    #   opt-in to the fused Pallas filter+score kernel: map this policy's
+    #   math onto the kernel's (load, cap, w_load, w_src) template and the
+    #   whole ScheduleOne reduction runs as one tile kernel on TPU (see
+    #   docs/kernels.md).  The hook MUST be numerically equivalent to
+    #   feasible+score — tests/test_kernel_policy_parity.py enforces this
+    #   for the built-ins.  Missing means reference path only.
 
 
 def policy_queue_order(policy):
     """Return the policy's queue_order hook or None (FIFO)."""
     return getattr(policy, "queue_order", None)
+
+
+def policy_supports_kernel(policy) -> bool:
+    """True when the policy opts into the fused Pallas kernel path."""
+    return getattr(policy, "kernel_inputs", None) is not None
 
 
 def policy_prepare_params(policy, params: FlexParams) -> FlexParams:

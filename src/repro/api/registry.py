@@ -37,8 +37,23 @@ def register_policy(name: str, factory: Callable[[], object] | None = None):
     """Register a policy factory under ``name``.
 
     Usable as a decorator on a policy class (zero-arg constructible) or
-    called directly with a factory/lambda.  Re-registering a name
-    overwrites it (last one wins), which keeps notebooks reloadable.
+    called directly with a factory/lambda.
+
+    Duplicate names: re-registering an existing name silently OVERWRITES
+    the previous factory — last registration wins, with no error or
+    warning.  This is deliberate: ``importlib.reload`` / notebook re-runs
+    re-execute the decorators, and raising on the second pass would make
+    iterative development impossible.  The flip side is that a typo'd
+    name can shadow a built-in (e.g. re-registering ``"flex-f"``), so
+    pick distinct names for experiments; ``list_policies()`` shows what
+    is currently live, and the docs-drift check (``scripts/check_docs.py``,
+    run as part of tier-1) fails when a registered name is missing from
+    the ``docs/api.md`` registry table.
+
+    ``get_policy(name)`` calls the factory on EVERY lookup, so callers
+    receive a fresh instance each time — registered classes must be
+    cheap, zero-argument constructibles (frozen dataclasses with
+    defaults).
     """
     def _add(f):
         _POLICIES[name] = f

@@ -64,14 +64,21 @@ def place_task(
     penalty: jnp.ndarray,
     params: FlexParams,
     kind,
+    use_kernel: bool = False,
+    interpret: bool = False,
 ) -> Tuple[NodeState, jnp.ndarray]:
-    """ScheduleOne (Alg. 3): returns (new_state, node_idx); idx = -1 on failure."""
+    """ScheduleOne (Alg. 3): returns (new_state, node_idx); idx = -1 on failure.
+
+    ``use_kernel``/``interpret`` select the fused Pallas filter+score path
+    for kernel-capable policies (docs/kernels.md).
+    """
     from repro.api.admission import admit_one
     from repro.api.registry import resolve_policy
 
     policy = resolve_policy(kind)
     ctx, task = _ctx_task(node, r_task, src_bucket, penalty, params)
-    return admit_one(policy, ctx, task, valid)
+    return admit_one(policy, ctx, task, valid,
+                     use_kernel=use_kernel, interpret=interpret)
 
 
 def schedule_queue(
@@ -83,6 +90,8 @@ def schedule_queue(
     params: FlexParams,
     kind,
     priorities: jnp.ndarray | None = None,  # (Q,) i32; None = CLASS_BATCH
+    use_kernel: bool = False,
+    interpret: bool = False,
 ) -> Tuple[NodeState, jnp.ndarray]:
     """Place a queue of tasks sequentially.  Returns (state, placements (Q,)).
 
@@ -90,6 +99,8 @@ def schedule_queue(
     hook is the caller's concern (the simulator applies it before calling
     in).  Priority-aware policies (e.g. ``flex-priority``) need
     ``priorities``; it defaults to all-batch when omitted.
+    ``use_kernel``/``interpret`` select the fused Pallas filter+score path
+    for kernel-capable policies (docs/kernels.md).
     """
     from repro.api.admission import admit_queue
     from repro.api.registry import resolve_policy
@@ -98,7 +109,8 @@ def schedule_queue(
     if priorities is None:
         priorities = jnp.zeros_like(src_buckets)
     return admit_queue(policy, node, requests, src_buckets, priorities,
-                       valid, penalty, params)
+                       valid, penalty, params,
+                       use_kernel=use_kernel, interpret=interpret)
 
 
 # ---------------------------------------------------------------------------

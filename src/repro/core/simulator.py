@@ -19,6 +19,15 @@ Per-slot pipeline (semantics match Kubernetes + Alg. 3):
   5. refresh the load estimator, clear reservations
   6. order the queue via the policy's queue_order hook (FIFO when absent)
      and admit retries + this slot's arrivals sequentially
+
+Execution substrate of step 6 (the hot path): with
+``SimConfig(use_kernel=True)`` every ScheduleOne decision in the inner
+scan dispatches to the fused Pallas filter+score kernel
+(``repro.kernels.flex_score``) for policies that expose the
+``kernel_inputs`` hook — one kernel call per placement, the whole decision
+step compiles into the scan body.  ``kernel_interpret=True`` runs that
+kernel through the Pallas interpreter (pure XLA) so CPU tests exercise the
+identical tiling/masking logic; see docs/kernels.md.
 """
 from __future__ import annotations
 
@@ -170,7 +179,8 @@ def simulate_core(
         qi = jnp.maximum(queue_ids, 0)
         node, placed_idx = admission.admit_queue(
             policy, node, ts.request[qi], ts.src[qi], ts.priority[qi],
-            valid, ctrl.penalty, params)
+            valid, ctrl.penalty, params,
+            use_kernel=cfg.use_kernel, interpret=cfg.kernel_interpret)
 
         ok = valid & (placed_idx >= 0)
         # scatter placements (unique ids per slot; -1 slots write a no-op max)

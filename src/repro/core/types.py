@@ -136,6 +136,12 @@ class SimConfig(NamedTuple):
     wfs_iters: int = 4             # progressive-filling iterations for WFS
     demand_scale: float = 1.0      # §5.6 sensitivity knob (scales demand, not request)
     record_node_usage: bool = False  # keep (S, N, R) per-node usage in SlotMetrics
+    use_kernel: bool = False       # route ScheduleOne through the fused Pallas
+                                   # filter+score kernel (docs/kernels.md); policies
+                                   # without the kernel_inputs hook keep the
+                                   # reference path
+    kernel_interpret: bool = False  # run that kernel via the Pallas interpreter
+                                    # (pure XLA — CPU parity tests / debugging)
 
 
 class SlotMetrics(NamedTuple):

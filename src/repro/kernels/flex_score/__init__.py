@@ -1,1 +1,6 @@
+from repro.kernels.flex_score.flex_score import (  # noqa: F401
+    NEG_INF,
+    flex_score_tiles,
+)
 from repro.kernels.flex_score.ops import flex_pick_node  # noqa: F401
+from repro.kernels.flex_score.ref import pick_node_ref  # noqa: F401

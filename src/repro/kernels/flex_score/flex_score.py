@@ -10,6 +10,17 @@ For real deployments the node table lives in HBM and tiles stream through
 VMEM — node counts of 10^5+ per scheduling decision at microsecond latency,
 which is the paper's "sub-second for thousands of nodes" requirement with
 4-5 orders of margin.
+
+Layout and conventions are documented in docs/kernels.md.  Two points that
+matter for correctness:
+
+  * The per-task scalars travel in ONE packed ``(1, R + 4)`` task vector
+    ``[r_0..r_{R-1}, penalty, cap, w_load, w_src]`` so they stay traced
+    values (policies derive e.g. ``cap`` from the task's priority class)
+    instead of recompile-triggering static kernel parameters.
+  * N need NOT be a multiple of ``tile``: the wrapper zero-pads the node
+    table up to ``ntiles * tile`` and the kernel masks rows ``>= n_valid``
+    infeasible, so padding rows can never win the argmax.
 """
 from __future__ import annotations
 
@@ -19,44 +30,64 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-_NEG = -1e30
+# Masking convention shared with repro.api.admission.NEG_INF and the
+# reference oracle (ref.py): infeasible/padding scores are set to NEG_INF
+# and "any feasible node" is decided by ``best > NEG_INF / 2``.  A finite
+# sentinel (not -inf) keeps max/argmax NaN-free on every backend.
+NEG_INF = -1e30
 
 
 def _kernel(est_ref, res_ref, src_ref, task_ref, out_max_ref, out_idx_ref,
-            *, tile: int, w_load: float, w_src: float):
+            *, tile: int, n_valid: int):
     t = pl.program_id(0)
     est = est_ref[...].astype(jnp.float32)          # (tile, R)
     res = res_ref[...].astype(jnp.float32)          # (tile, R)
     src = src_ref[...].astype(jnp.float32)          # (tile, 1)
-    task = task_ref[...].astype(jnp.float32)        # (1, R+1): [r..., penalty]
-    r = task[0, :-1]
-    penalty = task[0, -1]
+    task = task_ref[...].astype(jnp.float32)        # (1, R+4)
+    R = est.shape[1]
+    r = task[0, :R]
+    penalty = task[0, R]
+    cap = task[0, R + 1]
+    w_load = task[0, R + 2]
+    w_src = task[0, R + 3]
 
     load = penalty * est + res                      # (tile, R)
-    feasible = jnp.all(load + r[None, :] <= 1.0, axis=-1)    # (tile,)
+    feasible = jnp.all(load + r[None, :] <= cap, axis=-1)    # (tile,)
+    # Mask the zero-padded tail rows of the last tile (docs/kernels.md):
+    # row index >= n_valid means "not a real node", never placeable.
+    rows = t * tile + jax.lax.broadcasted_iota(jnp.int32, (tile, 1), 0)[:, 0]
+    feasible = jnp.logical_and(feasible, rows < n_valid)
     score = -(w_load * jnp.max(load, axis=-1) + w_src * src[:, 0])
-    score = jnp.where(feasible, score, _NEG)
+    score = jnp.where(feasible, score, NEG_INF)
 
     best = jnp.max(score)
     arg = jnp.argmax(score).astype(jnp.int32)
     out_max_ref[0, 0] = best
-    out_idx_ref[0, 0] = jnp.where(best > _NEG / 2, t * tile + arg, -1)
+    out_idx_ref[0, 0] = jnp.where(best > NEG_INF / 2, t * tile + arg, -1)
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("tile", "w_load", "w_src", "interpret"))
+@functools.partial(jax.jit, static_argnames=("tile", "interpret"))
 def flex_score_tiles(est, reserved, src_frac, task_vec, *, tile=512,
-                     w_load=1.0, w_src=0.25, interpret=False):
-    """est/reserved: (N, R); src_frac: (N, 1); task_vec: (1, R+1).
+                     interpret=False):
+    """Per-tile (max score, argmax) partials for one placement decision.
 
-    Returns (tile_max (ntiles,), tile_idx (ntiles,)).
+    est/reserved: (N, R); src_frac: (N, 1); task_vec: (1, R+4) packed as
+    ``[r..., penalty, cap, w_load, w_src]``.  N is arbitrary: the node
+    table is zero-padded to the next multiple of ``tile`` and the tail is
+    masked infeasible inside the kernel.
+
+    Returns (tile_max (ntiles,), tile_idx (ntiles,)) — tile_idx entries are
+    GLOBAL node indices (or -1 when the whole tile is infeasible).
     """
     N, R = est.shape
-    tile = min(tile, N)
-    assert N % tile == 0
-    ntiles = N // tile
-    kernel = functools.partial(_kernel, tile=tile, w_load=w_load,
-                               w_src=w_src)
+    tile = max(1, min(tile, N))
+    ntiles = pl.cdiv(N, tile)
+    pad = ntiles * tile - N
+    if pad:
+        est = jnp.pad(est, ((0, pad), (0, 0)))
+        reserved = jnp.pad(reserved, ((0, pad), (0, 0)))
+        src_frac = jnp.pad(src_frac, ((0, pad), (0, 0)))
+    kernel = functools.partial(_kernel, tile=tile, n_valid=N)
     out_max, out_idx = pl.pallas_call(
         kernel,
         grid=(ntiles,),
@@ -64,7 +95,7 @@ def flex_score_tiles(est, reserved, src_frac, task_vec, *, tile=512,
             pl.BlockSpec((tile, R), lambda t: (t, 0)),
             pl.BlockSpec((tile, R), lambda t: (t, 0)),
             pl.BlockSpec((tile, 1), lambda t: (t, 0)),
-            pl.BlockSpec((1, R + 1), lambda t: (0, 0)),
+            pl.BlockSpec((1, R + 4), lambda t: (0, 0)),
         ],
         out_specs=[
             pl.BlockSpec((1, 1), lambda t: (t, 0)),

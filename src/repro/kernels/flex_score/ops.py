@@ -1,32 +1,69 @@
-"""Public wrapper: one Flex placement decision over the node table."""
+"""Public wrapper: one Flex placement decision over the node table.
+
+``flex_pick_node`` is the kernel/policy boundary documented in
+docs/kernels.md: the policy layer (``repro.api.admission.pick_node``) hands
+it the node-side arrays from a policy's ``kernel_inputs`` hook, and it
+dispatches to the Pallas tile kernel on TPU (or in interpreter mode) with
+the reference einsum everywhere else.
+"""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.flex_score.flex_score import flex_score_tiles
+from repro.kernels.flex_score.flex_score import NEG_INF, flex_score_tiles
 from repro.kernels.flex_score.ref import pick_node_ref
-
-_NEG = -1e30
 
 
 def flex_pick_node(est, reserved, src_frac, r_task, penalty, *,
-                   w_load=1.0, w_src=0.25, tile=512, interpret=False):
-    """Returns (node_idx or -1, best_score, any_feasible)."""
-    N = est.shape[0]
+                   w_load=1.0, w_src=0.25, cap=1.0, tile=512,
+                   interpret=False):
+    """One fused filter+score+argmax placement decision (Alg. 3 lines 3-9).
+
+    Args:
+      est: (N, R) f32 — estimated node load L-hat (multiplied by ``penalty``
+        in-kernel, eq. 9).
+      reserved: (N, R) f32 — this-round reservations.
+      src_frac: (N,) f32 — fraction of each node's tasks sharing the
+        incoming task's source bucket (§4.3 spreading term).
+      r_task: (R,) f32 (or scalar) — the task's declared request.
+      penalty: scalar — current estimation penalty P.
+      w_load / w_src: scalar score weights; the score is
+        ``-(w_load * max_R(load) + w_src * src_frac)``.  May be traced
+        values (they ride in the kernel's packed task vector).
+      cap: scalar per-resource capacity bound (1.0 = full node; priority
+        policies pass a task-dependent value).
+      tile: nodes per VMEM block.  N need NOT be a multiple of ``tile`` —
+        the tail tile is zero-padded and masked in-kernel.
+      interpret: run the Pallas kernel through the Pallas interpreter
+        (pure XLA ops, works on any backend).  This is the testing escape
+        hatch: CPU CI exercises the REAL kernel logic — tiling, padding,
+        masking, cross-tile reduction — without TPU hardware, and it is
+        jit/scan-compatible, so whole simulator runs can flow through it
+        (``SimConfig(kernel_interpret=True)``).
+
+    Dispatch: Pallas when ``interpret=True`` or the default backend is TPU;
+    otherwise the reference einsum (``pick_node_ref``) — same floats, same
+    NEG_INF masking convention, bit-for-bit the same answer.
+
+    Returns (node_idx or -1, best_score, any_feasible).
+    """
     use_pallas = interpret or jax.default_backend() == "tpu"
-    tile = min(tile, N)
-    if not use_pallas or N % tile:
+    if not use_pallas:
         return pick_node_ref(est, reserved, src_frac, r_task, penalty,
-                             w_load, w_src)
-    task_vec = jnp.concatenate(
-        [jnp.asarray(r_task, jnp.float32).reshape(-1),
-         jnp.asarray(penalty, jnp.float32).reshape(1)]).reshape(1, -1)
+                             w_load, w_src, cap=cap)
+    task_vec = jnp.concatenate([
+        jnp.asarray(r_task, jnp.float32).reshape(-1),
+        jnp.asarray(penalty, jnp.float32).reshape(1),
+        jnp.asarray(cap, jnp.float32).reshape(1),
+        jnp.asarray(w_load, jnp.float32).reshape(1),
+        jnp.asarray(w_src, jnp.float32).reshape(1),
+    ]).reshape(1, -1)
     tmax, tidx = flex_score_tiles(est, reserved,
                                   src_frac.reshape(-1, 1).astype(jnp.float32),
-                                  task_vec, tile=tile, w_load=w_load,
-                                  w_src=w_src, interpret=interpret)
+                                  task_vec, tile=tile, interpret=interpret)
     t = jnp.argmax(tmax)
     best = tmax[t]
-    idx = jnp.where(best > _NEG / 2, tidx[t], -1).astype(jnp.int32)
-    return idx, best, best > _NEG / 2
+    any_feasible = best > NEG_INF / 2
+    idx = jnp.where(any_feasible, tidx[t], -1).astype(jnp.int32)
+    return idx, best, any_feasible

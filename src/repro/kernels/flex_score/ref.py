@@ -1,20 +1,33 @@
-"""Oracle for the Flex filter+score step (Alg. 3 ScheduleOne, vectorized)."""
+"""Oracle for the Flex filter+score step (Alg. 3 ScheduleOne, vectorized).
+
+This is the reference einsum path: the exact float expressions the Pallas
+kernel (flex_score.py) evaluates per tile, computed over the whole node
+table in one shot.  Kernel and oracle share the NEG_INF masking convention
+(docs/kernels.md), and the parity tests in tests/test_kernels_flex_score.py
+hold them bit-for-bit equal.
+"""
 from __future__ import annotations
 
 import jax.numpy as jnp
 
-_NEG = -1e30
+from repro.kernels.flex_score.flex_score import NEG_INF
 
 
-def pick_node_ref(est, reserved, src_frac, r_task, penalty, w_load, w_src):
-    """est/reserved: (N, R); src_frac: (N,); r_task: (R,).
+def pick_node_ref(est, reserved, src_frac, r_task, penalty, w_load, w_src,
+                  cap=1.0):
+    """est/reserved: (N, R); src_frac: (N,); r_task: (R,) or scalar.
+
+    ``penalty``/``cap``/``w_load``/``w_src`` are scalars (python floats or
+    traced 0-d arrays).  ``cap`` is the per-resource capacity bound —
+    policies like ``flex-priority`` derive it from the task's priority
+    class.
 
     Returns (best_idx or -1, best_score, any_feasible).
     """
     load = penalty * est + reserved                       # (N, R)
-    feasible = jnp.all(load + r_task <= 1.0, axis=-1)     # (N,)
+    feasible = jnp.all(load + r_task <= cap, axis=-1)     # (N,)
     score = -(w_load * jnp.max(load, axis=-1) + w_src * src_frac)
-    score = jnp.where(feasible, score, _NEG)
+    score = jnp.where(feasible, score, NEG_INF)
     any_feasible = jnp.any(feasible)
     idx = jnp.where(any_feasible, jnp.argmax(score), -1).astype(jnp.int32)
     return idx, jnp.max(score), any_feasible

@@ -1,0 +1,30 @@
+"""Tier-1 wiring for the docs-drift guard (scripts/check_docs.py).
+
+Registered policies must appear in the docs/api.md registry table with a
+correct kernel-path flag; a new ``register_policy`` without a docs row
+fails HERE, not in review.
+
+The guard runs in a subprocess: the policy registry is process-global and
+other tests register throwaway policies into it, which must not count as
+documentation drift.
+"""
+import pathlib
+import subprocess
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+
+def test_registry_docs_in_sync():
+    proc = subprocess.run(
+        [sys.executable, str(ROOT / "scripts" / "check_docs.py")],
+        capture_output=True, text=True)
+    assert proc.returncode == 0, (
+        f"docs drifted from the registry:\n{proc.stderr}")
+
+
+def test_readme_points_at_docs():
+    readme = (ROOT / "README.md").read_text()
+    for target in ("docs/api.md", "docs/kernels.md",
+                   "examples/quickstart.py", "pytest"):
+        assert target in readme, f"README.md lost its pointer to {target}"

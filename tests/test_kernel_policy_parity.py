@@ -1,0 +1,115 @@
+"""Kernel path vs reference path parity across the policy layer.
+
+The contract (docs/kernels.md): for every policy exposing the
+``kernel_inputs`` hook, routing admission through the fused Pallas
+filter+score kernel must reproduce the reference ``feasible``/``score``
+path decision-for-decision.  Verified here at three altitudes — one
+``pick_node`` decision, a ``schedule_queue`` scan, and whole simulator
+runs — with the kernel in interpreter mode so CPU CI runs the real
+tiling/masking logic.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import admission, get_policy, policy_supports_kernel
+from repro.core import SimConfig, run, schedule_queue
+from repro.core.types import FlexParams, NodeState
+from repro.kernels import flex_score
+from repro.traces import generate_calibrated
+
+KERNEL_POLICIES = ["flex-f", "flex-l", "flex-priority", "best-fit-usage"]
+REFERENCE_ONLY = ["least-fit", "oversub"]
+
+CFG = SimConfig(n_nodes=70, n_slots=16, arrivals_per_slot=64,
+                retry_capacity=32)
+
+
+def _node_state(n, key):
+    ks = jax.random.split(key, 3)
+    return NodeState.zeros(n)._replace(
+        est_usage=jax.random.uniform(ks[0], (n, 2)) * 0.7,
+        reserved=jax.random.uniform(ks[1], (n, 2)) * 0.1,
+        n_tasks=jnp.full((n,), 3, jnp.int32),
+        src_count=jax.random.randint(ks[2], (n, 64), 0, 3))
+
+
+def test_neg_inf_convention_shared():
+    # One masking convention across the admission core, the kernel and
+    # its reference oracle — docs/kernels.md calls this out as load-bearing.
+    from repro.kernels.flex_score import ref
+    assert admission.NEG_INF == flex_score.NEG_INF == ref.NEG_INF
+
+
+def test_capability_flags():
+    for name in KERNEL_POLICIES:
+        assert policy_supports_kernel(get_policy(name)), name
+    for name in REFERENCE_ONLY:
+        assert not policy_supports_kernel(get_policy(name)), name
+
+
+@pytest.mark.parametrize("name", KERNEL_POLICIES + REFERENCE_ONLY)
+def test_pick_node_kernel_matches_reference(name):
+    # Reference-only policies must silently keep the reference path when
+    # use_kernel is requested; kernel policies must agree exactly.
+    pol = get_policy(name)
+    node = _node_state(100, jax.random.PRNGKey(0))
+    ctx = admission.PolicyContext(node=node, penalty=jnp.asarray(1.3),
+                                  params=FlexParams.default())
+    for prio in (0, 1):
+        task = admission.TaskView(jnp.asarray([0.1, 0.12]),
+                                  jnp.asarray(5), jnp.asarray(prio))
+        i_ref, f_ref = admission.pick_node(pol, ctx, task, use_kernel=False)
+        i_ker, f_ker = admission.pick_node(pol, ctx, task, use_kernel=True,
+                                           interpret=True)
+        assert int(i_ref) == int(i_ker)
+        assert bool(f_ref) == bool(f_ker)
+
+
+@pytest.mark.parametrize("name", KERNEL_POLICIES)
+def test_schedule_queue_kernel_matches_reference(name):
+    pol = get_policy(name)
+    params = FlexParams.default()
+    node = _node_state(70, jax.random.PRNGKey(2))
+    Q = 32
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    reqs = jax.random.uniform(ks[0], (Q, 2)) * 0.15
+    srcs = jax.random.randint(ks[1], (Q,), 0, 64)
+    prios = jax.random.randint(ks[2], (Q,), 0, 2)
+    valid = jnp.ones((Q,), bool)
+    pen = jnp.asarray(1.2)
+    _, pl_ref = schedule_queue(node, reqs, srcs, valid, pen, params, pol,
+                               priorities=prios)
+    _, pl_ker = schedule_queue(node, reqs, srcs, valid, pen, params, pol,
+                               priorities=prios, use_kernel=True,
+                               interpret=True)
+    np.testing.assert_array_equal(np.asarray(pl_ref), np.asarray(pl_ker))
+
+
+@pytest.mark.parametrize("name", KERNEL_POLICIES)
+def test_simulator_kernel_matches_reference(name):
+    # Acceptance criterion: whole simulator runs with the kernel-backed
+    # path produce the same admissions/utilization as the reference path.
+    ts = generate_calibrated(0, CFG.n_nodes, CFG.n_slots, 1.5)
+    ref = run(ts, CFG, name)
+    ker = run(ts, CFG._replace(use_kernel=True, kernel_interpret=True), name)
+    np.testing.assert_array_equal(np.asarray(ref.placement),
+                                  np.asarray(ker.placement))
+    np.testing.assert_array_equal(np.asarray(ref.admit_slot),
+                                  np.asarray(ker.admit_slot))
+    np.testing.assert_allclose(np.asarray(ref.metrics.usage),
+                               np.asarray(ker.metrics.usage))
+    np.testing.assert_allclose(np.asarray(ref.metrics.qos),
+                               np.asarray(ker.metrics.qos))
+
+
+def test_reference_only_policy_runs_with_use_kernel():
+    # use_kernel on an RLB policy is a no-op, not an error: the run must
+    # equal the plain reference run.
+    ts = generate_calibrated(0, CFG.n_nodes, CFG.n_slots, 1.5)
+    ref = run(ts, CFG, "least-fit")
+    ker = run(ts, CFG._replace(use_kernel=True, kernel_interpret=True),
+              "least-fit")
+    np.testing.assert_array_equal(np.asarray(ref.placement),
+                                  np.asarray(ker.placement))

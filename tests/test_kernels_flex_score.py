@@ -1,4 +1,9 @@
-"""flex_score kernel vs reference across load regimes, incl. no-fit."""
+"""flex_score kernel vs reference across load regimes, incl. no-fit.
+
+``interpret=True`` runs the REAL Pallas kernel logic (tiling, padding,
+tail masking, cross-tile reduction) through the Pallas interpreter, so
+these parity tests exercise the kernel path on CPU CI (docs/kernels.md).
+"""
 import jax
 import jax.numpy as jnp
 import pytest
@@ -7,18 +12,21 @@ from repro.kernels.flex_score.ops import flex_pick_node
 from repro.kernels.flex_score.ref import pick_node_ref
 
 
-@pytest.mark.parametrize("N,tile", [(256, 64), (1024, 256), (512, 512)])
-@pytest.mark.parametrize("scale", [0.2, 0.8, 3.0])
-def test_matches_ref(N, tile, scale):
-    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+def _rand_state(N, scale, seed=1):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
     est = jax.random.uniform(ks[0], (N, 2)) * scale
     res = jax.random.uniform(ks[1], (N, 2)) * 0.05
     src = jax.random.uniform(ks[2], (N,))
+    return est, res, src
+
+
+def _assert_matches(N, tile, scale, **kw):
+    est, res, src = _rand_state(N, scale)
     r = jnp.asarray([0.08, 0.1])
     for P in (1.0, 2.0):
         i_k, s_k, f_k = flex_pick_node(est, res, src, r, P, tile=tile,
-                                       interpret=True)
-        i_r, s_r, f_r = pick_node_ref(est, res, src, r, P, 1.0, 0.25)
+                                       interpret=True, **kw)
+        i_r, s_r, f_r = pick_node_ref(est, res, src, r, P, 1.0, 0.25, **kw)
         assert bool(f_k) == bool(f_r)
         if bool(f_r):
             assert int(i_k) == int(i_r)
@@ -27,9 +35,42 @@ def test_matches_ref(N, tile, scale):
             assert int(i_k) == -1
 
 
-def test_all_infeasible_returns_minus_one():
-    est = jnp.ones((128, 2)) * 0.99
-    i, s, f = flex_pick_node(est, jnp.zeros((128, 2)), jnp.zeros((128,)),
-                             jnp.asarray([0.5, 0.5]), 1.0, tile=64,
+@pytest.mark.parametrize("N,tile", [(256, 64), (1024, 256), (512, 512)])
+@pytest.mark.parametrize("scale", [0.2, 0.8, 3.0])
+def test_matches_ref(N, tile, scale):
+    _assert_matches(N, tile, scale)
+
+
+@pytest.mark.parametrize("N", [5, 100, 513])
+@pytest.mark.parametrize("scale", [0.2, 0.8, 3.0])
+def test_non_tile_multiple_matches_ref(N, scale):
+    # N not a multiple of the tile: the wrapper zero-pads the node table
+    # and the kernel masks the tail rows (no reference-path fallback).
+    _assert_matches(N, 64, scale)
+    _assert_matches(N, 512, scale)
+
+
+@pytest.mark.parametrize("N,tile", [(128, 64), (513, 512)])
+def test_all_infeasible_returns_minus_one(N, tile):
+    # N=513/tile=512 covers the padding trap: zero-padded tail rows have
+    # zero load and WOULD be feasible if the in-kernel row mask failed.
+    est = jnp.ones((N, 2)) * 0.99
+    i, s, f = flex_pick_node(est, jnp.zeros((N, 2)), jnp.zeros((N,)),
+                             jnp.asarray([0.5, 0.5]), 1.0, tile=tile,
                              interpret=True)
     assert int(i) == -1 and not bool(f)
+
+
+@pytest.mark.parametrize("N", [100, 513])
+def test_cap_parameter_matches_ref(N):
+    # Priority policies pass a per-task capacity bound through the packed
+    # task vector; check it against the reference with the same cap.
+    est, res, src = _rand_state(N, 0.8)
+    r = jnp.asarray([0.08, 0.1])
+    for cap in (0.7, 0.9):
+        i_k, _, f_k = flex_pick_node(est, res, src, r, 1.2, cap=cap,
+                                     tile=64, interpret=True)
+        i_r, _, f_r = pick_node_ref(est, res, src, r, 1.2, 1.0, 0.25,
+                                    cap=cap)
+        assert bool(f_k) == bool(f_r)
+        assert int(i_k) == int(i_r)
