@@ -1,15 +1,25 @@
 """Scheduler decision latency (paper §4.3: O(N/p), sub-second for thousands
-of nodes).  Three sections:
+of nodes).  Four sections:
 
   * ``schedule_one_*``: the jitted sequential ScheduleOne loop per decision,
     reference path vs the fused Pallas kernel path (``use_kernel=True``).
   * ``flex_pick_*``: the single fused filter+score+argmax primitive, kernel
     vs reference einsum, for N in {512, 2048, 8192} — each pair is parity-
     asserted (same node index) before it is timed.
+  * ``admit_wavefront_*``: wavefront batched admission vs the sequential
+    per-task kernel path for N in {512, 2048, 8192} x Q in {64, 512} —
+    parity-asserted placement-for-placement, with the conflict-round count
+    and node-sweep reduction (Q sweeps -> rounds sweeps) in the derived
+    column.  ``python benchmarks/run.py --json bench_scheduler_throughput``
+    records these rows in BENCH_scheduler_throughput.json so the perf
+    trajectory across PRs is trackable.
   * On non-TPU backends the kernel rows run through the Pallas interpreter
     (``mode=interpret`` in the derived column) — correct but not
     representative of TPU latency; the reference rows are the honest CPU
-    numbers.
+    numbers.  Wavefront's win is sweep amortization (one HBM pass of the
+    node table scores the whole queue), so the interpret/CPU wall-clock
+    understates the TPU gain; the ``node_sweeps_ratio`` column is the
+    backend-independent measure.
 
 The queue goes through the open-policy admission core (``schedule_queue``
 with a registry policy object), so new policies inherit this bench."""
@@ -19,12 +29,13 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import Row
-from repro.api import get_policy
+from repro.api import admission, get_policy
 from repro.core import FlexParams, NodeState, schedule_queue
 from repro.kernels.flex_score.ops import flex_pick_node
 from repro.kernels.flex_score.ref import pick_node_ref
 
 KERNEL_SIZES = [512, 2048, 8192]
+WAVEFRONT_GRID = [(n, q) for n in KERNEL_SIZES for q in (64, 512)]
 
 
 def _time(fn, *args, iters=5, warmup=1):
@@ -100,4 +111,49 @@ def run(full: bool):
         rows.append(Row(f"flex_pick_kernel_n{n}", us_ker,
                         {"nodes": n, "interpret": interp,
                          "speedup_vs_ref": us_ref / us_ker}))
+
+    # --- wavefront batched admission vs the per-task kernel scan ----------
+    for n, q in WAVEFRONT_GRID:
+        ks = jax.random.split(jax.random.PRNGKey(n + q), 6)
+        node = NodeState.zeros(n)._replace(
+            est_usage=jax.random.uniform(ks[0], (n, 2)) * 0.6,
+            reserved=jax.random.uniform(ks[1], (n, 2)) * 0.05,
+            n_tasks=jax.random.randint(ks[2], (n,), 2, 8),
+            src_count=jax.random.randint(ks[3], (n, 64), 0, 4))
+        reqs = jax.random.uniform(ks[4], (q, 2)) * 0.15
+        # a diverse queue: sources round-robin over every bucket (the
+        # low-conflict regime wavefront is built for; grouped sources
+        # degrade toward one commit per round — see docs/kernels.md)
+        srcs = jnp.arange(q, dtype=jnp.int32) % 64
+        prios = jax.random.randint(ks[5], (q,), 0, 2)
+        valid = jnp.ones((q,), bool)
+        pen = jnp.asarray(1.2)
+
+        f_seq = jax.jit(lambda nd: admission.admit_queue(
+            policy, nd, reqs, srcs, prios, valid, pen, params,
+            use_kernel=True, interpret=not on_tpu))
+        f_wave = jax.jit(lambda nd: admission.admit_queue_wavefront(
+            policy, nd, reqs, srcs, prios, valid, pen, params,
+            interpret=not on_tpu, with_rounds=True))
+
+        # parity gate: wavefront must reproduce the sequential decisions
+        pl_seq = f_seq(node)[1]
+        _, pl_wave, rounds = f_wave(node)
+        assert (pl_seq == pl_wave).all(), (
+            f"wavefront/sequential disagree at N={n} Q={q}")
+        rounds = int(rounds)
+
+        us_seq = _time(lambda nd: f_seq(nd)[1], node, iters=3) / q
+        rows.append(Row(f"admit_seq_kernel_n{n}_q{q}", us_seq,
+                        {"nodes": n, "queue": q,
+                         "decisions_per_s": 1e6 / us_seq,
+                         "interpret": interp}))
+        us_wave = _time(lambda nd: f_wave(nd)[1], node, iters=3) / q
+        rows.append(Row(f"admit_wavefront_n{n}_q{q}", us_wave,
+                        {"nodes": n, "queue": q,
+                         "decisions_per_s": 1e6 / us_wave,
+                         "speedup_vs_seq": us_seq / us_wave,
+                         "rounds": rounds,
+                         "node_sweeps_ratio": q / max(rounds, 1),
+                         "interpret": interp}))
     return rows

@@ -2,9 +2,15 @@
 
 Prints ``name,us_per_call,derived`` CSV.  REPRO_FULL=1 switches to
 paper-scale configs (4000 nodes / 288 slots / ~700k tasks).
+
+``--json`` additionally writes one ``BENCH_<name>.json`` per bench run
+(e.g. ``BENCH_scheduler_throughput.json``) with the same rows as
+structured records, so the perf trajectory is machine-trackable across
+PRs: ``python benchmarks/run.py --json bench_scheduler_throughput``.
 """
 from __future__ import annotations
 
+import json
 import os
 import sys
 import time
@@ -26,7 +32,9 @@ BENCHES = [
 
 def main() -> None:
     full = os.environ.get("REPRO_FULL", "0") == "1"
-    only = sys.argv[1:] or None
+    args = sys.argv[1:]
+    write_json = "--json" in args
+    only = [a for a in args if a != "--json"] or None
     print("name,us_per_call,derived")
     t_start = time.time()
     failures = 0
@@ -36,8 +44,15 @@ def main() -> None:
         try:
             mod = __import__(f"benchmarks.{mod_name}",
                              fromlist=["run"])
-            for row in mod.run(full):
+            rows = mod.run(full)
+            for row in rows:
                 print(row.csv(), flush=True)
+            if write_json:
+                out = f"BENCH_{mod_name.removeprefix('bench_')}.json"
+                with open(out, "w") as f:
+                    json.dump([{"name": r.name, "us_per_call": r.us_per_call,
+                                **r.derived} for r in rows], f, indent=1)
+                print(f"# wrote {out}", flush=True)
         except Exception as e:
             failures += 1
             print(f"{mod_name},0,ERROR={type(e).__name__}:{e}", flush=True)

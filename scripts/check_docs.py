@@ -8,6 +8,11 @@ Fails (exit 1 / non-empty problem list) when:
     docs table silently fell behind;
   * a documented kernel-path checkmark disagrees with the policy's actual
     ``kernel_inputs`` capability;
+  * a kernel-hooked policy is missing from the "Built-in mappings" table
+    in ``docs/kernels.md`` (every policy on the kernel path must document
+    how its math maps onto the kernel template);
+  * the admission core exposes wavefront batched admission but
+    ``docs/kernels.md`` lost its "Batched wavefront admission" section;
   * a cross-linked docs file (``docs/kernels.md``) has gone missing.
 
 Run standalone (``python scripts/check_docs.py``) or through the tier-1
@@ -39,18 +44,45 @@ def _registry_table_rows(api_md: str) -> dict:
     return rows
 
 
+def _kernel_mapping_names(kernels_md: str) -> set:
+    """Policy names in the 'Built-in mappings' table of docs/kernels.md."""
+    names = set()
+    in_table = False
+    for line in kernels_md.splitlines():
+        if line.startswith("Built-in mappings"):
+            in_table = True
+            continue
+        if in_table and line.startswith("#"):
+            break
+        if in_table and line.startswith("|"):
+            first_cell = line.split("|")[1]
+            names.update(re.findall(r"`([^`]+)`", first_cell))
+    return names
+
+
 def problems() -> list:
     """Return a list of human-readable drift descriptions (empty = clean)."""
-    from repro.api import get_policy, list_policies, policy_supports_kernel
+    from repro.api import admission, get_policy, list_policies, \
+        policy_supports_kernel
 
     out = []
     api_md_path = ROOT / "docs" / "api.md"
     if not api_md_path.exists():
         return [f"missing {api_md_path}"]
     api_md = api_md_path.read_text()
-    if not (ROOT / "docs" / "kernels.md").exists():
+    kernels_md_path = ROOT / "docs" / "kernels.md"
+    kernels_md = ""
+    if not kernels_md_path.exists():
         out.append("docs/kernels.md is cross-linked from docs/api.md "
                    "but does not exist")
+    else:
+        kernels_md = kernels_md_path.read_text()
+        if (hasattr(admission, "admit_queue_wavefront")
+                and "## Batched wavefront admission" not in kernels_md):
+            out.append(
+                "repro.api.admission exposes admit_queue_wavefront but "
+                "docs/kernels.md has no 'Batched wavefront admission' "
+                "section")
 
     table = _registry_table_rows(api_md)
     for name in list_policies():
@@ -72,6 +104,13 @@ def problems() -> list:
             out.append(
                 f"docs/api.md registry table lists {name!r}, which is "
                 f"not registered")
+
+    mapping = _kernel_mapping_names(kernels_md)
+    for name in list_policies():
+        if policy_supports_kernel(get_policy(name)) and name not in mapping:
+            out.append(
+                f"policy {name!r} has a kernel_inputs hook but is missing "
+                f"from the 'Built-in mappings' table in docs/kernels.md")
     return out
 
 

@@ -19,6 +19,7 @@ from repro.api.admission import (  # noqa: F401
     TaskView,
     admit_one,
     admit_queue,
+    admit_queue_wavefront,
     committed_load,
     dominant,
     fits,

@@ -19,6 +19,7 @@ from __future__ import annotations
 
 from typing import NamedTuple
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -188,15 +189,29 @@ def admit_one(policy, ctx: PolicyContext, task: TaskView,
 
 def admit_queue(policy, node: NodeState, requests, srcs, priorities,
                 valid, penalty, params: FlexParams, *,
-                use_kernel: bool = False, interpret: bool = False):
-    """Admit a padded queue of tasks sequentially (scan over admit_one).
+                use_kernel: bool = False, interpret: bool = False,
+                batch_mode: bool = False):
+    """Admit a padded queue of tasks in queue order.
 
-    requests: (Q, R); srcs/priorities/valid: (Q,).  With ``use_kernel``
-    every decision in the scan body is one fused kernel call (policies
-    without the ``kernel_inputs`` hook silently keep the reference path).
+    requests: (Q, R); srcs/priorities/valid: (Q,).  Two execution shapes,
+    decision-for-decision identical:
+
+      * sequential (default): one ``lax.scan`` over ``admit_one`` — with
+        ``use_kernel`` every decision in the scan body is one fused kernel
+        call (policies without the ``kernel_inputs`` hook silently keep
+        the reference path);
+      * ``batch_mode=True``: wavefront rounds over the BATCHED kernel
+        (``admit_queue_wavefront``) for kernel-hooked policies — the whole
+        queue is scored per node-table sweep instead of one task per
+        sweep.  Policies without the hook silently fall back to the
+        sequential scan.
+
     Returns (NodeState, placements (Q,) — node idx or -1).
     """
-    import jax
+    if batch_mode and getattr(policy, "kernel_inputs", None) is not None:
+        return admit_queue_wavefront(policy, node, requests, srcs,
+                                     priorities, valid, penalty, params,
+                                     interpret=interpret)
 
     def step(ns, xs):
         r, src, prio, ok = xs
@@ -205,3 +220,168 @@ def admit_queue(policy, node: NodeState, requests, srcs, priorities,
                          use_kernel=use_kernel, interpret=interpret)
 
     return jax.lax.scan(step, node, (requests, srcs, priorities, valid))
+
+
+# ---------------------------------------------------------------------------
+# Wavefront batched admission (docs/kernels.md, "Batched wavefront
+# admission")
+# ---------------------------------------------------------------------------
+
+def _batched_kernel_inputs(policy, ctx: PolicyContext, tasks: TaskView):
+    """vmap a policy's ``kernel_inputs`` hook over a whole task queue.
+
+    Node-side arrays (``est_usage``/``reserved``) must be task-INDEPENDENT
+    (they describe cluster state; ``out_axes=None`` enforces it — a hook
+    that derives them from the task raises here and cannot take the
+    wavefront path).  Per-task leaves come back batched: ``src_frac``
+    becomes (Q, N); the four scalars broadcast to (Q,).
+    """
+    hook = policy.kernel_inputs
+    out_axes = KernelInputs(est_usage=None, reserved=None, src_frac=0,
+                            penalty=0, cap=0, w_load=0, w_src=0)
+    return jax.vmap(lambda t: hook(ctx, t), out_axes=out_axes)(tasks)
+
+
+def admit_queue_wavefront(policy, node: NodeState, requests, srcs,
+                          priorities, valid, penalty, params: FlexParams, *,
+                          interpret: bool = False, tile: int = 512,
+                          tie_margin: float = 1e-5,
+                          with_rounds: bool = False):
+    """Admit the queue in conflict-resolution rounds over the batched kernel.
+
+    Instead of Q sequential O(N) node-table sweeps (one kernel launch per
+    task), each ROUND issues ONE batched sweep
+    (``flex_pick_node_batch``) that scores every still-pending task, then
+    commits the longest provably-safe prefix of them.  The number of
+    sweeps drops from Q to the number of rounds.
+
+    Committed decisions are decision-for-decision identical to the
+    sequential ``lax.scan`` (the parity argument, proved in
+    docs/kernels.md):
+
+      * a task whose round sees NO feasible node finalizes -1 immediately:
+        commits only ever ADD load, and the capacity filter is antitone in
+        load, so no later state can make it feasible — whatever earlier
+        still-pending tasks end up doing;
+      * pending tasks commit as a PREFIX in queue order, cut at the first
+        task that is "unsafe": its candidate node was already picked by an
+        earlier pending task this round (dup), or some earlier-committed
+        node's POST-COMMIT score could reach its candidate's score (beat).
+        For a task inside that prefix, the sequential scan would have seen
+        exactly the round-start state plus one commit on each earlier
+        prefix candidate — all distinct nodes, none its own candidate, and
+        none scoring high enough to flip its argmax — so its sequential
+        decision IS the round-start candidate.  (A commit CAN raise a
+        node's score for other tasks — the same-source fraction dilutes,
+        and best-fit flips the sign of ``w_load`` — which is why the beat
+        check is evaluated, not assumed away, and why "no earlier task
+        picked the same node" alone would be unsound.)
+
+    The beat check recomputes post-commit candidate scores with the
+    canonical kernel-template arithmetic and flags anything within
+    ``tie_margin`` (relative) of the candidate score.  Over-flagging is
+    safe — the task rolls to the next round and is re-decided exactly by
+    the kernel — so the margin absorbs mul/add-fusion ULP differences
+    between the Pallas and jnp flavors of the same float expressions.
+
+    Exactness of the check assumes the hook maps onto node state
+    canonically: ``est_usage`` unaffected by admissions, ``reserved``
+    tracking ``node.reserved``, and ``src_frac`` equal to
+    ``src_count[:, src] / max(n_tasks, 1)`` whenever ``w_src != 0``.  All
+    built-in kernel policies qualify; a custom hook that violates this
+    must keep ``batch_mode`` off.
+
+    Queue-width caveat: the conflict check materializes a few (Q, Q) f32
+    planes per round (no N axis).  That is trivial next to the (Q, N)
+    kernel sweep while Q << N, but at paper-scale padded queues
+    (``retry_capacity + arrivals_per_slot`` = 5120 > N = 4000) it becomes
+    the dominant allocation (~100 MB per plane).  Wavefront targets
+    kernel-launch-bound backends at moderate queue widths; keep
+    ``admission_mode="sequential"`` when Q approaches N, or shrink the
+    slot queue.
+
+    Returns (NodeState, placements (Q,)) — plus the round count when
+    ``with_rounds`` (static flag) is set.
+    """
+    from repro.kernels.flex_score.ops import flex_pick_node_batch
+
+    requests = jnp.asarray(requests, jnp.float32)
+    Q, R = requests.shape
+    N = node.n_tasks.shape[0]
+    pos = jnp.arange(Q, dtype=jnp.int32)
+    tasks = TaskView(request=requests, src=srcs, priority=priorities)
+
+    def round_body(state):
+        ns, pending, placement, rounds = state
+        ctx = PolicyContext(node=ns, penalty=penalty, params=params)
+        ki = _batched_kernel_inputs(policy, ctx, tasks)
+        cand, best, feas = flex_pick_node_batch(
+            ki.est_usage, ki.reserved, ki.src_frac, requests, ki.penalty,
+            w_load=ki.w_load, w_src=ki.w_src, cap=ki.cap, tile=tile,
+            interpret=interpret)
+
+        # Tasks with no feasible node finalize -1 now (placement already
+        # -1); the rest are this round's wavefront.
+        pending_f = pending & feas
+        cc = jnp.clip(cand, 0, N - 1)
+
+        # dup: an earlier pending task already picked this node.
+        first_at = jnp.full((N,), Q, jnp.int32).at[cc].min(
+            jnp.where(pending_f, pos, Q))
+        dup = pending_f & (first_at[cc] < pos)
+        lead = pending_f & ~dup   # first picker of each candidate node
+
+        # beat: would node c_i, AFTER task i's commit, reach task q's
+        # candidate score?  Evaluated for all (q, i) pairs with the
+        # canonical kernel-template arithmetic; each prefix node receives
+        # exactly one commit, so row i is node c_i's true post-commit
+        # state.  The node axis N never appears, but the check IS O(Q^2)
+        # memory per round (a few (Q, Q) f32 planes) — see the queue-width
+        # caveat in the docstring.
+        est_i = ki.est_usage[cc]                      # (Q, R)
+        res_i = ki.reserved[cc] + requests            # (Q, R) post-commit
+        feas_qi = None
+        maxl_qi = None
+        for j in range(R):
+            l_j = ki.penalty[:, None] * est_i[:, j][None, :] \
+                + res_i[:, j][None, :]
+            fit_j = l_j + requests[:, j][:, None] <= ki.cap[:, None]
+            feas_qi = fit_j if feas_qi is None else feas_qi & fit_j
+            maxl_qi = l_j if maxl_qi is None else jnp.maximum(maxl_qi, l_j)
+        same_src = srcs[:, None] == srcs[None, :]     # [q, i]
+        cnt_qi = ns.src_count[cc[None, :], srcs[:, None]]  # src_count[c_i, s_q]
+        src_qi = ((cnt_qi + same_src).astype(jnp.float32)
+                  / jnp.maximum(ns.n_tasks[cc] + 1, 1)
+                  .astype(jnp.float32)[None, :])
+        s_qi = -(ki.w_load[:, None] * maxl_qi + ki.w_src[:, None] * src_qi)
+        s_qi = jnp.where(feas_qi, s_qi, NEG_INF)
+        margin = tie_margin * (1.0 + jnp.abs(best))
+        beats = s_qi >= (best - margin)[:, None]
+        earlier_lead = lead[None, :] & (pos[None, :] < pos[:, None])
+        beat = jnp.any(beats & earlier_lead, axis=1)
+
+        # Commit the prefix before the first unsafe task; everything after
+        # it rolls to the next round (its decision could change theirs).
+        unsafe = pending_f & (dup | beat)
+        first_unsafe = jnp.min(jnp.where(unsafe, pos, Q))
+        commit = pending_f & (pos < first_unsafe)
+
+        okf = commit.astype(jnp.float32)
+        oki = commit.astype(jnp.int32)
+        ns = NodeState(
+            est_usage=ns.est_usage,
+            reserved=ns.reserved.at[cc].add(okf[:, None] * requests),
+            requested=ns.requested.at[cc].add(okf[:, None] * requests),
+            n_tasks=ns.n_tasks.at[cc].add(oki),
+            src_count=ns.src_count.at[cc, srcs].add(oki),
+        )
+        placement = jnp.where(commit, cand, placement)
+        return ns, pending_f & ~commit, placement, rounds + 1
+
+    init = (node, valid, jnp.full((Q,), -1, jnp.int32),
+            jnp.zeros((), jnp.int32))
+    node, _, placement, rounds = jax.lax.while_loop(
+        lambda s: jnp.any(s[1]), round_body, init)
+    if with_rounds:
+        return node, placement, rounds
+    return node, placement

@@ -58,6 +58,17 @@ class PlacementPolicy(Protocol):
     #   docs/kernels.md).  The hook MUST be numerically equivalent to
     #   feasible+score — tests/test_kernel_policy_parity.py enforces this
     #   for the built-ins.  Missing means reference path only.
+    #
+    #   Wavefront batched admission (admission_mode="wavefront") vmaps
+    #   this hook over the queue: node-side leaves (est_usage, reserved)
+    #   must NOT depend on the task (out_axes=None enforces it — the (N,R)
+    #   arrays are shared by the whole queue, never (Q,N,R)); src_frac and
+    #   the four scalars may.  The wavefront conflict check additionally
+    #   assumes the canonical node-state mapping (est_usage admission-
+    #   invariant, reserved = node.reserved, src_frac =
+    #   src_count[:, src]/max(n_tasks, 1) when w_src != 0); custom hooks
+    #   violating it must keep wavefront off.  See docs/kernels.md,
+    #   "Batched wavefront admission".
 
 
 def policy_queue_order(policy):

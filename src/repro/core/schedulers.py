@@ -92,15 +92,18 @@ def schedule_queue(
     priorities: jnp.ndarray | None = None,  # (Q,) i32; None = CLASS_BATCH
     use_kernel: bool = False,
     interpret: bool = False,
+    batch_mode: bool = False,
 ) -> Tuple[NodeState, jnp.ndarray]:
-    """Place a queue of tasks sequentially.  Returns (state, placements (Q,)).
+    """Place a queue of tasks in queue order.  Returns (state, placements (Q,)).
 
     The queue is admitted IN THE ORDER GIVEN — a policy's ``queue_order``
     hook is the caller's concern (the simulator applies it before calling
     in).  Priority-aware policies (e.g. ``flex-priority``) need
     ``priorities``; it defaults to all-batch when omitted.
     ``use_kernel``/``interpret`` select the fused Pallas filter+score path
-    for kernel-capable policies (docs/kernels.md).
+    for kernel-capable policies; ``batch_mode`` admits the queue in
+    wavefront rounds over the batched kernel instead of the sequential
+    scan — same decisions, fewer node-table sweeps (docs/kernels.md).
     """
     from repro.api.admission import admit_queue
     from repro.api.registry import resolve_policy
@@ -110,7 +113,8 @@ def schedule_queue(
         priorities = jnp.zeros_like(src_buckets)
     return admit_queue(policy, node, requests, src_buckets, priorities,
                        valid, penalty, params,
-                       use_kernel=use_kernel, interpret=interpret)
+                       use_kernel=use_kernel, interpret=interpret,
+                       batch_mode=batch_mode)
 
 
 # ---------------------------------------------------------------------------

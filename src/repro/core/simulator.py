@@ -25,9 +25,13 @@ Execution substrate of step 6 (the hot path): with
 scan dispatches to the fused Pallas filter+score kernel
 (``repro.kernels.flex_score``) for policies that expose the
 ``kernel_inputs`` hook — one kernel call per placement, the whole decision
-step compiles into the scan body.  ``kernel_interpret=True`` runs that
-kernel through the Pallas interpreter (pure XLA) so CPU tests exercise the
-identical tiling/masking logic; see docs/kernels.md.
+step compiles into the scan body.  ``SimConfig(admission_mode="wavefront")``
+replaces the per-task scan with conflict-resolution rounds over the
+BATCHED kernel (one node-table sweep scores the whole queue; decisions
+stay bit-identical to the sequential scan — docs/kernels.md).
+``kernel_interpret=True`` runs either kernel through the Pallas
+interpreter (pure XLA) so CPU tests exercise the identical tiling/masking
+logic; see docs/kernels.md.
 """
 from __future__ import annotations
 
@@ -48,8 +52,13 @@ from repro.core.types import (
     SlotMetrics,
     TaskSet,
 )
-
-MAX_RETRIES = 16
+# Deliberately module-level despite the package cycle (repro.api.experiment
+# imports this module): only the MODULE object is bound here — on the
+# api-first import direction it is still partially initialized, which is
+# fine because its attributes are touched at trace time only.  Importing
+# names (classes/functions) from repro.api at this level would break that
+# direction of the cycle.
+from repro.api import admission
 
 
 def build_arrival_table(arrival: np.ndarray, n_slots: int,
@@ -103,9 +112,12 @@ def simulate_core(
     est,                          # Estimator (hashable, static)
     ctrl_impl,                    # PenaltyController (hashable, static)
 ) -> SimResult:
-    from repro.api import admission
     from repro.api.protocols import policy_queue_order
 
+    if cfg.admission_mode not in ("sequential", "wavefront"):
+        raise ValueError(
+            f"unknown SimConfig.admission_mode {cfg.admission_mode!r}; "
+            f"expected 'sequential' or 'wavefront'")
     n_nodes, n_slots = cfg.n_nodes, cfg.n_slots
     T = ts.num_tasks
     Qr = cfg.retry_capacity
@@ -180,7 +192,8 @@ def simulate_core(
         node, placed_idx = admission.admit_queue(
             policy, node, ts.request[qi], ts.src[qi], ts.priority[qi],
             valid, ctrl.penalty, params,
-            use_kernel=cfg.use_kernel, interpret=cfg.kernel_interpret)
+            use_kernel=cfg.use_kernel, interpret=cfg.kernel_interpret,
+            batch_mode=cfg.admission_mode == "wavefront")
 
         ok = valid & (placed_idx >= 0)
         # scatter placements (unique ids per slot; -1 slots write a no-op max)
@@ -192,7 +205,7 @@ def simulate_core(
         # retry bookkeeping
         failed = valid & (placed_idx < 0)
         attempts = carry["attempts"].at[qi].add(failed.astype(jnp.int32))
-        eligible = failed & (attempts[qi] <= MAX_RETRIES)
+        eligible = failed & (attempts[qi] <= cfg.max_retries)
         retry_order = jnp.argsort(~eligible, stable=True)   # eligible first
         sorted_ids = queue_ids[retry_order]
         n_eligible = jnp.sum(eligible.astype(jnp.int32))

@@ -142,6 +142,15 @@ class SimConfig(NamedTuple):
                                    # reference path
     kernel_interpret: bool = False  # run that kernel via the Pallas interpreter
                                     # (pure XLA — CPU parity tests / debugging)
+    admission_mode: str = "sequential"  # "sequential": one ScheduleOne scan step
+                                        # per task; "wavefront": batched
+                                        # conflict-resolution rounds over the
+                                        # whole queue (docs/kernels.md) —
+                                        # decision-identical, fewer node sweeps.
+                                        # Policies without the kernel_inputs
+                                        # hook keep the sequential scan.
+    max_retries: int = 16          # admission failures before a task is dropped
+                                   # (counted into n_rejected); static for jit
 
 
 class SlotMetrics(NamedTuple):

@@ -1,6 +1,13 @@
 from repro.kernels.flex_score.flex_score import (  # noqa: F401
     NEG_INF,
+    flex_score_batch_tiles,
     flex_score_tiles,
 )
-from repro.kernels.flex_score.ops import flex_pick_node  # noqa: F401
-from repro.kernels.flex_score.ref import pick_node_ref  # noqa: F401
+from repro.kernels.flex_score.ops import (  # noqa: F401
+    flex_pick_node,
+    flex_pick_node_batch,
+)
+from repro.kernels.flex_score.ref import (  # noqa: F401
+    pick_node_batch_ref,
+    pick_node_ref,
+)

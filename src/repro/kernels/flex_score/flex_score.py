@@ -66,6 +66,51 @@ def _kernel(est_ref, res_ref, src_ref, task_ref, out_max_ref, out_idx_ref,
     out_idx_ref[0, 0] = jnp.where(best > NEG_INF / 2, t * tile + arg, -1)
 
 
+def _batch_kernel(est_ref, res_ref, src_ref, task_ref, out_max_ref,
+                  out_idx_ref, *, tile: int, n_valid: int):
+    """Score a whole (Q, tile) task x node block per grid step.
+
+    The wavefront-admission variant of ``_kernel``: the node slab is loaded
+    from HBM ONCE per tile and scored against ALL Q queued tasks, so the
+    arithmetic intensity per tile load grows by a factor of Q.  Float
+    expressions are kept op-for-op identical to the per-task kernel (the
+    resource reduction is an associative max / logical-and fold), which is
+    what makes wavefront decisions bit-identical to the sequential scan.
+    """
+    t = pl.program_id(0)
+    est = est_ref[...].astype(jnp.float32)          # (tile, R)
+    res = res_ref[...].astype(jnp.float32)          # (tile, R)
+    src = src_ref[...].astype(jnp.float32)          # (Q, tile)
+    task = task_ref[...].astype(jnp.float32)        # (Q, R+4)
+    R = est.shape[1]
+    r = task[:, :R]                                 # (Q, R)
+    penalty = task[:, R]                            # (Q,)
+    cap = task[:, R + 1]
+    w_load = task[:, R + 2]
+    w_src = task[:, R + 3]
+
+    # Per-resource fold instead of a (Q, tile, R) cube: R is tiny (2) and
+    # this keeps the VMEM working set at a few (Q, tile) planes.
+    feasible = None
+    maxload = None
+    for j in range(R):
+        load_j = penalty[:, None] * est[None, :, j] + res[None, :, j]
+        fit_j = load_j + r[:, j][:, None] <= cap[:, None]
+        feasible = fit_j if feasible is None else jnp.logical_and(feasible,
+                                                                  fit_j)
+        maxload = load_j if maxload is None else jnp.maximum(maxload, load_j)
+
+    rows = t * tile + jax.lax.broadcasted_iota(jnp.int32, (1, tile), 1)
+    feasible = jnp.logical_and(feasible, rows < n_valid)
+    score = -(w_load[:, None] * maxload + w_src[:, None] * src)
+    score = jnp.where(feasible, score, NEG_INF)
+
+    best = jnp.max(score, axis=1)                   # (Q,)
+    arg = jnp.argmax(score, axis=1).astype(jnp.int32)
+    out_max_ref[0, :] = best
+    out_idx_ref[0, :] = jnp.where(best > NEG_INF / 2, t * tile + arg, -1)
+
+
 @functools.partial(jax.jit, static_argnames=("tile", "interpret"))
 def flex_score_tiles(est, reserved, src_frac, task_vec, *, tile=512,
                      interpret=False):
@@ -108,3 +153,61 @@ def flex_score_tiles(est, reserved, src_frac, task_vec, *, tile=512,
         interpret=interpret,
     )(est, reserved, src_frac, task_vec)
     return out_max[:, 0], out_idx[:, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "interpret"))
+def flex_score_batch_tiles(est, reserved, src_frac, task_mat, *, tile=512,
+                           interpret=False):
+    """Per-tile (max score, argmax) partials for a WHOLE queue of tasks.
+
+    est/reserved: (N, R); src_frac: (Q, N) — one same-source-fraction row
+    per queued task; task_mat: (Q, R+4), each row packed as
+    ``[r..., penalty, cap, w_load, w_src]`` (the per-task analogue of
+    ``flex_score_tiles``'s single task vector).
+
+    One grid step loads a (tile, R) node slab ONCE and scores it against
+    all Q tasks (docs/kernels.md, "Batched wavefront admission").  N is
+    arbitrary (zero-padded + masked tail, as in the per-task kernel); Q is
+    padded to a multiple of 8 for TPU sublane alignment and the pad rows
+    are sliced off before returning.
+
+    Returns (tile_max (ntiles, Q), tile_idx (ntiles, Q)); tile_idx holds
+    GLOBAL node indices, -1 where a tile is infeasible for that task.
+    """
+    N, R = est.shape
+    Q = task_mat.shape[0]
+    tile = max(1, min(tile, N))
+    ntiles = pl.cdiv(N, tile)
+    pad = ntiles * tile - N
+    if pad:
+        est = jnp.pad(est, ((0, pad), (0, 0)))
+        reserved = jnp.pad(reserved, ((0, pad), (0, 0)))
+        src_frac = jnp.pad(src_frac, ((0, 0), (0, pad)))
+    qpad = (-Q) % 8
+    if qpad:
+        # Padded task rows (all-zero) can at worst pick node 0; the wrapper
+        # slices them off, so they never reach the caller.
+        task_mat = jnp.pad(task_mat, ((0, qpad), (0, 0)))
+        src_frac = jnp.pad(src_frac, ((0, qpad), (0, 0)))
+    Qp = Q + qpad
+    kernel = functools.partial(_batch_kernel, tile=tile, n_valid=N)
+    out_max, out_idx = pl.pallas_call(
+        kernel,
+        grid=(ntiles,),
+        in_specs=[
+            pl.BlockSpec((tile, R), lambda t: (t, 0)),
+            pl.BlockSpec((tile, R), lambda t: (t, 0)),
+            pl.BlockSpec((Qp, tile), lambda t: (0, t)),
+            pl.BlockSpec((Qp, R + 4), lambda t: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, Qp), lambda t: (t, 0)),
+            pl.BlockSpec((1, Qp), lambda t: (t, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((ntiles, Qp), jnp.float32),
+            jax.ShapeDtypeStruct((ntiles, Qp), jnp.int32),
+        ],
+        interpret=interpret,
+    )(est, reserved, src_frac, task_mat)
+    return out_max[:, :Q], out_idx[:, :Q]

@@ -11,8 +11,9 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.flex_score.flex_score import NEG_INF, flex_score_tiles
-from repro.kernels.flex_score.ref import pick_node_ref
+from repro.kernels.flex_score.flex_score import (NEG_INF, flex_score_batch_tiles,
+                                                 flex_score_tiles)
+from repro.kernels.flex_score.ref import pick_node_batch_ref, pick_node_ref
 
 
 def flex_pick_node(est, reserved, src_frac, r_task, penalty, *,
@@ -66,4 +67,59 @@ def flex_pick_node(est, reserved, src_frac, r_task, penalty, *,
     best = tmax[t]
     any_feasible = best > NEG_INF / 2
     idx = jnp.where(any_feasible, tidx[t], -1).astype(jnp.int32)
+    return idx, best, any_feasible
+
+
+def flex_pick_node_batch(est, reserved, src_frac, r_task, penalty, *,
+                         w_load, w_src, cap, tile=512, interpret=False):
+    """One batched filter+score+argmax pass over the whole queue.
+
+    The wavefront-admission primitive (docs/kernels.md, "Batched wavefront
+    admission"): every node tile is loaded once and scored against all Q
+    queued tasks, amortizing the per-decision kernel launch + HBM sweep of
+    ``flex_pick_node`` across the queue.
+
+    Args:
+      est / reserved: (N, R) f32 — node-side load state, shared by every
+        task (commits within a wavefront round are applied between calls).
+      src_frac: (Q, N) f32 — per-task same-source fraction rows.
+      r_task: (Q, R) f32 — declared requests.
+      penalty / w_load / w_src / cap: scalar or (Q,) — per-task scalars of
+        the kernel template; scalars are broadcast to the queue.
+      tile / interpret: as in ``flex_pick_node``.
+
+    Dispatch mirrors ``flex_pick_node``: Pallas when ``interpret=True`` or
+    on TPU, the batched reference einsum otherwise — all three agree
+    bit-for-bit, row for row, with the per-task primitive.
+
+    Returns (node_idx (Q,), best_score (Q,), any_feasible (Q,)).
+    """
+    r_task = jnp.asarray(r_task, jnp.float32)
+    Q = r_task.shape[0]
+    if r_task.shape != (Q, est.shape[1]) or src_frac.shape != (Q, est.shape[0]):
+        raise ValueError(
+            f"flex_pick_node_batch: expected r_task (Q, R)={Q, est.shape[1]} "
+            f"and src_frac (Q, N)={Q, est.shape[0]}, got {r_task.shape} and "
+            f"{src_frac.shape}")
+    bcast = lambda x: jnp.broadcast_to(
+        jnp.asarray(x, jnp.float32).reshape(-1), (Q,))
+    penalty, cap, w_load, w_src = map(bcast, (penalty, cap, w_load, w_src))
+    use_pallas = interpret or jax.default_backend() == "tpu"
+    if not use_pallas:
+        return pick_node_batch_ref(est, reserved,
+                                   src_frac.astype(jnp.float32), r_task,
+                                   penalty, w_load, w_src, cap=cap)
+    task_mat = jnp.concatenate([
+        r_task, penalty[:, None], cap[:, None],
+        w_load[:, None], w_src[:, None]], axis=1)       # (Q, R+4)
+    tmax, tidx = flex_score_batch_tiles(est, reserved,
+                                        src_frac.astype(jnp.float32),
+                                        task_mat, tile=tile,
+                                        interpret=interpret)
+    t = jnp.argmax(tmax, axis=0)                        # (Q,) winning tile
+    best = jnp.take_along_axis(tmax, t[None, :], axis=0)[0]
+    any_feasible = best > NEG_INF / 2
+    idx = jnp.where(any_feasible,
+                    jnp.take_along_axis(tidx, t[None, :], axis=0)[0],
+                    -1).astype(jnp.int32)
     return idx, best, any_feasible

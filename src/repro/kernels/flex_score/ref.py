@@ -31,3 +31,26 @@ def pick_node_ref(est, reserved, src_frac, r_task, penalty, w_load, w_src,
     any_feasible = jnp.any(feasible)
     idx = jnp.where(any_feasible, jnp.argmax(score), -1).astype(jnp.int32)
     return idx, jnp.max(score), any_feasible
+
+
+def pick_node_batch_ref(est, reserved, src_frac, r_task, penalty, w_load,
+                        w_src, cap=1.0):
+    """Batched oracle: score Q tasks against the node table in one shot.
+
+    est/reserved: (N, R); src_frac: (Q, N); r_task: (Q, R);
+    ``penalty``/``cap``/``w_load``/``w_src`` are (Q,) (scalars broadcast).
+    The per-(task, node) float expressions are op-for-op those of
+    ``pick_node_ref``, so every row equals the per-task oracle bit-for-bit.
+
+    Returns (idx (Q,), best_score (Q,), any_feasible (Q,)).
+    """
+    load = penalty[:, None, None] * est[None] + reserved[None]  # (Q, N, R)
+    feasible = jnp.all(load + r_task[:, None, :] <= cap[:, None, None],
+                       axis=-1)                                 # (Q, N)
+    score = -(w_load[:, None] * jnp.max(load, axis=-1)
+              + w_src[:, None] * src_frac)
+    score = jnp.where(feasible, score, NEG_INF)
+    any_feasible = jnp.any(feasible, axis=-1)
+    idx = jnp.where(any_feasible, jnp.argmax(score, axis=-1),
+                    -1).astype(jnp.int32)
+    return idx, jnp.max(score, axis=-1), any_feasible

@@ -7,6 +7,13 @@ path decision-for-decision.  Verified here at three altitudes — one
 ``pick_node`` decision, a ``schedule_queue`` scan, and whole simulator
 runs — with the kernel in interpreter mode so CPU CI runs the real
 tiling/masking logic.
+
+The wavefront tests extend the same contract to batched admission
+(``admit_queue_wavefront`` / ``SimConfig(admission_mode="wavefront")``):
+conflict-round commits must be placement-for-placement identical to the
+sequential scan, including on an adversarial queue where every task wants
+the same node (one commit per round — the worst case the prefix rule
+must survive, docs/kernels.md).
 """
 import jax
 import jax.numpy as jnp
@@ -19,11 +26,16 @@ from repro.core.types import FlexParams, NodeState
 from repro.kernels import flex_score
 from repro.traces import generate_calibrated
 
+pytestmark = pytest.mark.pallas_interpret
+
 KERNEL_POLICIES = ["flex-f", "flex-l", "flex-priority", "best-fit-usage"]
 REFERENCE_ONLY = ["least-fit", "oversub"]
 
 CFG = SimConfig(n_nodes=70, n_slots=16, arrivals_per_slot=64,
                 retry_capacity=32)
+# Small enough that 4 policies x 3 cluster sizes stay CPU-cheap, sized to
+# cross the 512-node tile boundary (N=513) per the acceptance criteria.
+WAVE_CFG = SimConfig(n_slots=10, arrivals_per_slot=48, retry_capacity=24)
 
 
 def _node_state(n, key):
@@ -113,3 +125,129 @@ def test_reference_only_policy_runs_with_use_kernel():
               "least-fit")
     np.testing.assert_array_equal(np.asarray(ref.placement),
                                   np.asarray(ker.placement))
+
+
+# ---------------------------------------------------------------------------
+# Wavefront batched admission parity
+# ---------------------------------------------------------------------------
+
+def _queue(Q, key, n_src=64):
+    ks = jax.random.split(key, 3)
+    reqs = jax.random.uniform(ks[0], (Q, 2)) * 0.15
+    srcs = jax.random.randint(ks[1], (Q,), 0, n_src)
+    prios = jax.random.randint(ks[2], (Q,), 0, 2)
+    return reqs, srcs, prios
+
+
+@pytest.mark.parametrize("name", KERNEL_POLICIES)
+@pytest.mark.parametrize("n", [5, 100, 513])
+def test_wavefront_queue_matches_sequential(name, n):
+    # admit_queue(batch_mode=True) vs the sequential scan: identical
+    # placements AND identical final NodeState, including padding entries
+    # (valid=False tail) and tasks that find no feasible node.
+    pol = get_policy(name)
+    params = FlexParams.default()
+    for seed in range(3):
+        node = _node_state(n, jax.random.PRNGKey(seed))
+        Q = 48
+        reqs, srcs, prios = _queue(Q, jax.random.PRNGKey(seed + 50))
+        valid = jnp.arange(Q) < Q - 4
+        pen = jnp.asarray(1.2)
+        ns_s, pl_s = admission.admit_queue(pol, node, reqs, srcs, prios,
+                                           valid, pen, params)
+        ns_w, pl_w = admission.admit_queue(pol, node, reqs, srcs, prios,
+                                           valid, pen, params,
+                                           batch_mode=True, interpret=True)
+        np.testing.assert_array_equal(np.asarray(pl_s), np.asarray(pl_w))
+        for a, b in zip(ns_s, ns_w):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("name", KERNEL_POLICIES)
+def test_wavefront_adversarial_single_hot_node(name):
+    # Every task from the same source, one node far emptier than the rest:
+    # every round, all pending tasks pick that node, so the prefix rule
+    # commits exactly one task per round until the node fills.  This is
+    # the degenerate case where the naive "commit unless an earlier task
+    # picked the same node" shortcut would still work by accident — but
+    # the decisions must match the sequential scan exactly, commit order
+    # included.
+    pol = get_policy(name)
+    params = FlexParams.default()
+    n, Q = 33, 24
+    node = NodeState.zeros(n)._replace(
+        est_usage=jnp.full((n, 2), 0.55).at[7].set(0.0),
+        n_tasks=jnp.full((n,), 2, jnp.int32))
+    reqs = jnp.full((Q, 2), 0.12)
+    srcs = jnp.full((Q,), 3, jnp.int32)
+    prios = jnp.zeros((Q,), jnp.int32)
+    valid = jnp.ones((Q,), bool)
+    pen = jnp.asarray(1.0)
+    ns_s, pl_s = admission.admit_queue(pol, node, reqs, srcs, prios, valid,
+                                       pen, params)
+    ns_w, pl_w, rounds = admission.admit_queue_wavefront(
+        pol, node, reqs, srcs, prios, valid, pen, params, interpret=True,
+        with_rounds=True)
+    np.testing.assert_array_equal(np.asarray(pl_s), np.asarray(pl_w))
+    for a, b in zip(ns_s, ns_w):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # identical tasks => identical candidates => ~one commit per round
+    assert int(rounds) >= int((pl_w >= 0).sum()) > 0
+
+
+def test_wavefront_all_infeasible_finalizes_in_one_round():
+    # No feasible node for anyone: every task finalizes -1 immediately
+    # (feasibility is antitone in load, docs/kernels.md), in one round.
+    pol = get_policy("flex-f")
+    params = FlexParams.default()
+    n, Q = 70, 16
+    node = NodeState.zeros(n)._replace(est_usage=jnp.full((n, 2), 0.99))
+    reqs = jnp.full((Q, 2), 0.5)
+    valid = jnp.ones((Q,), bool)
+    zeros = jnp.zeros((Q,), jnp.int32)
+    ns_w, pl_w, rounds = admission.admit_queue_wavefront(
+        pol, node, reqs, zeros, zeros, valid, jnp.asarray(1.0), params,
+        interpret=True, with_rounds=True)
+    assert (np.asarray(pl_w) == -1).all()
+    assert int(rounds) == 1
+    np.testing.assert_array_equal(np.asarray(ns_w.reserved),
+                                  np.asarray(node.reserved))
+
+
+@pytest.mark.parametrize("name", KERNEL_POLICIES)
+@pytest.mark.parametrize("n", [5, 100, 513])
+def test_simulator_wavefront_matches_sequential(name, n):
+    # Acceptance criterion: SimConfig(admission_mode="wavefront") is
+    # decision-for-decision identical to the sequential scan at simulator
+    # level — placements, admit slots and the rejection counter.
+    cfg = WAVE_CFG._replace(n_nodes=n)
+    ts = generate_calibrated(0, cfg.n_nodes, cfg.n_slots, 1.5)
+    ref = run(ts, cfg, name)
+    wav = run(ts, cfg._replace(admission_mode="wavefront",
+                               kernel_interpret=True), name)
+    np.testing.assert_array_equal(np.asarray(ref.placement),
+                                  np.asarray(wav.placement))
+    np.testing.assert_array_equal(np.asarray(ref.admit_slot),
+                                  np.asarray(wav.admit_slot))
+    np.testing.assert_array_equal(np.asarray(ref.metrics.n_rejected),
+                                  np.asarray(wav.metrics.n_rejected))
+    np.testing.assert_allclose(np.asarray(ref.metrics.usage),
+                               np.asarray(wav.metrics.usage))
+
+
+def test_wavefront_reference_only_policy_falls_back():
+    # admission_mode="wavefront" with a policy lacking kernel_inputs keeps
+    # the sequential scan silently — same contract as use_kernel.
+    ts = generate_calibrated(0, CFG.n_nodes, CFG.n_slots, 1.5)
+    ref = run(ts, CFG, "least-fit")
+    wav = run(ts, CFG._replace(admission_mode="wavefront"), "least-fit")
+    np.testing.assert_array_equal(np.asarray(ref.placement),
+                                  np.asarray(wav.placement))
+
+
+def test_unknown_admission_mode_raises():
+    ts = generate_calibrated(0, 5, 4, 1.0)
+    cfg = SimConfig(n_nodes=5, n_slots=4, arrivals_per_slot=8,
+                    retry_capacity=4, admission_mode="wavefart")
+    with pytest.raises(ValueError, match="admission_mode"):
+        run(ts, cfg, "flex-f")

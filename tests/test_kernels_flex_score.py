@@ -8,8 +8,10 @@ import jax
 import jax.numpy as jnp
 import pytest
 
-from repro.kernels.flex_score.ops import flex_pick_node
-from repro.kernels.flex_score.ref import pick_node_ref
+from repro.kernels.flex_score.ops import flex_pick_node, flex_pick_node_batch
+from repro.kernels.flex_score.ref import pick_node_batch_ref, pick_node_ref
+
+pytestmark = pytest.mark.pallas_interpret
 
 
 def _rand_state(N, scale, seed=1):
@@ -59,6 +61,92 @@ def test_all_infeasible_returns_minus_one(N, tile):
                              jnp.asarray([0.5, 0.5]), 1.0, tile=tile,
                              interpret=True)
     assert int(i) == -1 and not bool(f)
+
+
+def _rand_batch(N, Q, scale, seed=7):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    est = jax.random.uniform(ks[0], (N, 2)) * scale
+    res = jax.random.uniform(ks[1], (N, 2)) * 0.05
+    src = jax.random.uniform(ks[2], (Q, N))
+    r = jax.random.uniform(ks[3], (Q, 2)) * 0.2
+    return est, res, src, r
+
+
+@pytest.mark.parametrize("N", [5, 100, 513, 1024])
+@pytest.mark.parametrize("Q", [1, 7, 33])
+def test_batch_matches_batch_ref(N, Q):
+    # Batched Pallas (tiling + Q-padding + masked tail) vs the batched
+    # einsum oracle: same winner and feasibility row for row.  Q=7/33
+    # exercise the sublane padding (Q not a multiple of 8).
+    est, res, src, r = _rand_batch(N, Q, 0.8)
+    pen = jnp.full((Q,), 1.3)
+    ones = jnp.ones((Q,))
+    i_k, _, f_k = flex_pick_node_batch(est, res, src, r, pen, w_load=ones,
+                                       w_src=ones * 0.25, cap=ones,
+                                       tile=64, interpret=True)
+    i_r, _, f_r = pick_node_batch_ref(est, res, src, r, pen, ones,
+                                      ones * 0.25, cap=ones)
+    assert (jnp.asarray(i_k) == jnp.asarray(i_r)).all()
+    assert (jnp.asarray(f_k) == jnp.asarray(f_r)).all()
+
+
+@pytest.mark.parametrize("scale", [0.2, 0.8, 3.0])
+def test_batch_rows_match_per_task_kernel(scale):
+    # Each row of the batched kernel must be the per-task kernel's answer
+    # for that task — same argmax AND bit-identical best score (identical
+    # float expressions, docs/kernels.md).
+    N, Q = 513, 9
+    est, res, src, r = _rand_batch(N, Q, scale)
+    pen = 1.3
+    i_b, s_b, f_b = flex_pick_node_batch(est, res, src, r, pen, w_load=1.0,
+                                         w_src=0.25, cap=1.0, tile=64,
+                                         interpret=True)
+    for q in range(Q):
+        i_1, s_1, f_1 = flex_pick_node(est, res, src[q], r[q], pen,
+                                       tile=64, interpret=True)
+        assert int(i_1) == int(i_b[q])
+        assert bool(f_1) == bool(f_b[q])
+        if bool(f_1):
+            assert float(s_1) == float(s_b[q])
+
+
+def test_batch_per_task_scalars():
+    # penalty/cap/w_load/w_src vary per ROW of the packed task matrix: each
+    # row must match a per-task call with those scalars.
+    N, Q = 100, 6
+    est, res, src, r = _rand_batch(N, Q, 0.8)
+    ks = jax.random.split(jax.random.PRNGKey(11), 4)
+    pen = 1.0 + jax.random.uniform(ks[0], (Q,))
+    cap = 0.7 + 0.3 * jax.random.uniform(ks[1], (Q,))
+    w_load = jnp.where(jnp.arange(Q) % 2 == 0, 1.0, -1.0)  # incl. best-fit
+    w_src = 0.25 * jax.random.uniform(ks[3], (Q,))
+    i_b, _, f_b = flex_pick_node_batch(est, res, src, r, pen, w_load=w_load,
+                                       w_src=w_src, cap=cap, tile=64,
+                                       interpret=True)
+    for q in range(Q):
+        i_1, _, f_1 = flex_pick_node(est, res, src[q], r[q], pen[q],
+                                     w_load=w_load[q], w_src=w_src[q],
+                                     cap=cap[q], tile=64, interpret=True)
+        assert int(i_1) == int(i_b[q])
+        assert bool(f_1) == bool(f_b[q])
+
+
+def test_batch_all_infeasible_rows():
+    # Mixed queue: infeasible rows return -1 without disturbing feasible
+    # ones; the zero-padded tail (N=513, tile=512) must never win.
+    N, Q = 513, 8
+    est = jnp.ones((N, 2)) * 0.99
+    src = jnp.zeros((Q, N))
+    r = jnp.where(jnp.arange(Q)[:, None] % 2 == 0, 0.5,
+                  0.005) * jnp.ones((Q, 2))
+    i_b, _, f_b = flex_pick_node_batch(est, jnp.zeros((N, 2)), src, r, 1.0,
+                                       w_load=1.0, w_src=0.25, cap=1.0,
+                                       tile=512, interpret=True)
+    for q in range(Q):
+        if q % 2 == 0:
+            assert int(i_b[q]) == -1 and not bool(f_b[q])
+        else:
+            assert 0 <= int(i_b[q]) < N and bool(f_b[q])
 
 
 @pytest.mark.parametrize("N", [100, 513])

@@ -1,0 +1,110 @@
+"""Retry-path semantics: the ``max_retries`` boundary and queue ordering.
+
+A task that fails admission re-enters the next slot's queue until it has
+failed ``1 + SimConfig.max_retries`` times (the first attempt plus
+``max_retries`` retries), then drops into ``n_rejected``.  ``n_rejected``
+also counts retry-queue overflow (more eligible failures than
+``retry_capacity`` slots).  Within the retry queue, the eligible-first
+``argsort`` is STABLE: surviving tasks keep their queue order while
+exhausted ones fall out.
+"""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import SimConfig, run
+from repro.core.types import TaskSet
+
+
+def _taskset(arrival, request, duration=None, mean_usage=None, src=None):
+    """Deterministic TaskSet: demand == mean_usage, no noise."""
+    T = len(arrival)
+    request = jnp.asarray(request, jnp.float32)
+    if request.ndim == 1:
+        request = jnp.stack([request, request], axis=1)
+    mean = (jnp.asarray(mean_usage, jnp.float32)[:, None]
+            * jnp.ones((1, 2)) if mean_usage is not None
+            else request * 0.1)
+    return TaskSet(
+        arrival=jnp.asarray(arrival, jnp.int32),
+        duration=(jnp.asarray(duration, jnp.int32) if duration is not None
+                  else jnp.full((T,), 50, jnp.int32)),
+        request=request,
+        mean_usage=mean,
+        std_usage=jnp.zeros((T, 2), jnp.float32),
+        peak_usage=mean,
+        ar_rho=jnp.zeros((T,), jnp.float32),
+        priority=jnp.zeros((T,), jnp.int32),
+        src=(jnp.asarray(src, jnp.int32) if src is not None
+             else jnp.zeros((T,), jnp.int32)),
+    )
+
+
+def test_max_retries_default_unchanged():
+    assert SimConfig().max_retries == 16
+
+
+def test_dropped_exactly_after_retries_exhausted():
+    # One impossible task (request > capacity): it must survive exactly
+    # max_retries retry slots after its arrival-slot failure, then drop —
+    # n_rejected flips 0 -> 1 at slot index max_retries, not before.
+    for max_retries in (3, 5):
+        cfg = SimConfig(n_nodes=1, n_slots=10, arrivals_per_slot=4,
+                        retry_capacity=4, max_retries=max_retries)
+        ts = _taskset(arrival=[0], request=[1.5])
+        res = run(ts, cfg, "flex-f")
+        rejected = np.asarray(res.metrics.n_rejected)
+        expected = (np.arange(cfg.n_slots) >= max_retries).astype(np.int32)
+        np.testing.assert_array_equal(rejected, expected)
+        assert int(res.placement[0]) == -1
+
+
+def test_rejected_counts_overflow_and_exhausted():
+    # Four impossible tasks, retry capacity two: two overflow immediately
+    # at the arrival slot, the two that fit the queue burn through their
+    # retries and drop at slot max_retries.
+    cfg = SimConfig(n_nodes=1, n_slots=8, arrivals_per_slot=8,
+                    retry_capacity=2, max_retries=3)
+    ts = _taskset(arrival=[0, 0, 0, 0], request=[1.5, 1.5, 1.5, 1.5])
+    res = run(ts, cfg, "flex-f")
+    rejected = np.asarray(res.metrics.n_rejected)
+    assert rejected[0] == 2                    # overflow, counted same slot
+    assert rejected[cfg.max_retries - 1] == 2  # survivors still retrying
+    assert rejected[cfg.max_retries] == 4      # both exhausted
+    assert rejected[-1] == 4
+    assert (np.asarray(res.placement) == -1).all()
+
+
+def test_retry_queue_is_fifo_stable_across_failures():
+    # FIFO policy (flex-f), one node, three equal tasks + one impossible
+    # task X wedged between them.  Only one task fits per slot, so the
+    # admit slots reveal the retry order: it must stay the arrival order
+    # (stable eligible-first argsort), with X falling out after its
+    # retries WITHOUT reshuffling the survivors.
+    cfg = SimConfig(n_nodes=1, n_slots=10, arrivals_per_slot=8,
+                    retry_capacity=8, max_retries=2)
+    ts = _taskset(arrival=[0, 0, 0, 0],
+                  request=[0.6, 0.6, 1.5, 0.6],   # A, B, X, C
+                  mean_usage=[0.05, 0.05, 0.0, 0.05])
+    res = run(ts, cfg, "flex-f")
+    admit = np.asarray(res.admit_slot)
+    assert admit[0] == 0          # A admitted on arrival
+    assert admit[1] == 1          # B from the retry queue next slot
+    assert admit[3] == 2          # C after B — arrival order preserved
+    assert int(res.placement[2]) == -1
+    assert int(res.metrics.n_rejected[-1]) == 1   # X exhausted its retries
+
+
+def test_lrf_queue_order_applies_to_retries():
+    # flex-l's LRF queue_order sorts each slot's retries+arrivals by
+    # memory request: tasks arriving smallest-first still admit
+    # largest-first as capacity frees up.
+    cfg = SimConfig(n_nodes=1, n_slots=10, arrivals_per_slot=8,
+                    retry_capacity=8, max_retries=8)
+    ts = _taskset(arrival=[0, 0, 0],
+                  request=[0.7, 0.8, 0.9],        # C, B, A (reverse LRF)
+                  mean_usage=[0.02, 0.02, 0.02])
+    res = run(ts, cfg, "flex-l")
+    admit = np.asarray(res.admit_slot)
+    assert admit[2] == 0          # largest request first
+    assert admit[1] == 1
+    assert admit[0] == 2
