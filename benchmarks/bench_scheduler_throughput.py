@@ -10,9 +10,14 @@ of nodes).  Four sections:
     per-task kernel path for N in {512, 2048, 8192} x Q in {64, 512} —
     parity-asserted placement-for-placement, with the conflict-round count
     and node-sweep reduction (Q sweeps -> rounds sweeps) in the derived
-    column.  ``python benchmarks/run.py --json bench_scheduler_throughput``
-    records these rows in BENCH_scheduler_throughput.json so the perf
-    trajectory across PRs is trackable.
+    column.  Three variants per grid point: the legacy one-sweep-per-round
+    loop (``admit_wavefront_*``, topk=0), the top-K candidate-caching loop
+    (``admit_wavefront_topk_*``, K=8 + score-bucket dedup), and — at
+    N=2048, Q=512 — a duplicate-heavy queue (8 job shapes x 8 sources,
+    ``admit_wavefront_topk_dup_*``) that exercises the dedup fast path.
+    ``python benchmarks/run.py --json bench_scheduler_throughput``
+    merge-appends these rows into BENCH_scheduler_throughput.json so the
+    perf trajectory across PRs is trackable.
   * On non-TPU backends the kernel rows run through the Pallas interpreter
     (``mode=interpret`` in the derived column) — correct but not
     representative of TPU latency; the reference rows are the honest CPU
@@ -113,6 +118,58 @@ def run(full: bool):
                          "speedup_vs_ref": us_ref / us_ker}))
 
     # --- wavefront batched admission vs the per-task kernel scan ----------
+    def _wavefront_rows(tag, n, q, node, reqs, srcs, prios):
+        valid = jnp.ones((q,), bool)
+        pen = jnp.asarray(1.2)
+
+        f_seq = jax.jit(lambda nd: admission.admit_queue(
+            policy, nd, reqs, srcs, prios, valid, pen, params,
+            use_kernel=True, interpret=not on_tpu))
+        f_wave = jax.jit(lambda nd: admission.admit_queue_wavefront(
+            policy, nd, reqs, srcs, prios, valid, pen, params,
+            interpret=not on_tpu, topk=0, with_rounds=True))
+        f_topk = jax.jit(lambda nd: admission.admit_queue_wavefront(
+            policy, nd, reqs, srcs, prios, valid, pen, params,
+            interpret=not on_tpu, topk=8, dedup_buckets=64,
+            with_rounds=True))
+
+        # parity gate: both wavefront flavors must reproduce the
+        # sequential decisions before anything is timed
+        pl_seq = f_seq(node)[1]
+        _, pl_wave, w_rounds, w_sweeps = f_wave(node)
+        _, pl_topk, t_rounds, t_sweeps = f_topk(node)
+        assert (pl_seq == pl_wave).all(), (
+            f"wavefront/sequential disagree at N={n} Q={q}")
+        assert (pl_seq == pl_topk).all(), (
+            f"topk-wavefront/sequential disagree at N={n} Q={q}")
+
+        out = []
+        us_seq = _time(lambda nd: f_seq(nd)[1], node, iters=3) / q
+        out.append(Row(f"admit_seq_kernel_{tag}", us_seq,
+                       {"nodes": n, "queue": q,
+                        "decisions_per_s": 1e6 / us_seq,
+                        "interpret": interp}))
+        us_wave = _time(lambda nd: f_wave(nd)[1], node, iters=3) / q
+        out.append(Row(f"admit_wavefront_{tag}", us_wave,
+                       {"nodes": n, "queue": q,
+                        "decisions_per_s": 1e6 / us_wave,
+                        "speedup_vs_seq": us_seq / us_wave,
+                        "rounds": int(w_rounds),
+                        "sweeps": int(w_sweeps),
+                        "node_sweeps_ratio": q / max(int(w_sweeps), 1),
+                        "interpret": interp}))
+        us_topk = _time(lambda nd: f_topk(nd)[1], node, iters=3) / q
+        out.append(Row(f"admit_wavefront_topk_{tag}", us_topk,
+                       {"nodes": n, "queue": q,
+                        "decisions_per_s": 1e6 / us_topk,
+                        "speedup_vs_seq": us_seq / us_topk,
+                        "speedup_vs_wavefront": us_wave / us_topk,
+                        "rounds": int(t_rounds),
+                        "sweeps": int(t_sweeps),
+                        "node_sweeps_ratio": q / max(int(t_sweeps), 1),
+                        "interpret": interp}))
+        return out
+
     for n, q in WAVEFRONT_GRID:
         ks = jax.random.split(jax.random.PRNGKey(n + q), 6)
         node = NodeState.zeros(n)._replace(
@@ -126,34 +183,22 @@ def run(full: bool):
         # degrade toward one commit per round — see docs/kernels.md)
         srcs = jnp.arange(q, dtype=jnp.int32) % 64
         prios = jax.random.randint(ks[5], (q,), 0, 2)
-        valid = jnp.ones((q,), bool)
-        pen = jnp.asarray(1.2)
+        rows.extend(_wavefront_rows(f"n{n}_q{q}", n, q, node, reqs, srcs,
+                                    prios))
 
-        f_seq = jax.jit(lambda nd: admission.admit_queue(
-            policy, nd, reqs, srcs, prios, valid, pen, params,
-            use_kernel=True, interpret=not on_tpu))
-        f_wave = jax.jit(lambda nd: admission.admit_queue_wavefront(
-            policy, nd, reqs, srcs, prios, valid, pen, params,
-            interpret=not on_tpu, with_rounds=True))
-
-        # parity gate: wavefront must reproduce the sequential decisions
-        pl_seq = f_seq(node)[1]
-        _, pl_wave, rounds = f_wave(node)
-        assert (pl_seq == pl_wave).all(), (
-            f"wavefront/sequential disagree at N={n} Q={q}")
-        rounds = int(rounds)
-
-        us_seq = _time(lambda nd: f_seq(nd)[1], node, iters=3) / q
-        rows.append(Row(f"admit_seq_kernel_n{n}_q{q}", us_seq,
-                        {"nodes": n, "queue": q,
-                         "decisions_per_s": 1e6 / us_seq,
-                         "interpret": interp}))
-        us_wave = _time(lambda nd: f_wave(nd)[1], node, iters=3) / q
-        rows.append(Row(f"admit_wavefront_n{n}_q{q}", us_wave,
-                        {"nodes": n, "queue": q,
-                         "decisions_per_s": 1e6 / us_wave,
-                         "speedup_vs_seq": us_seq / us_wave,
-                         "rounds": rounds,
-                         "node_sweeps_ratio": q / max(rounds, 1),
-                         "interpret": interp}))
+    # duplicate-heavy queue: 8 job shapes x 8 sources -> 64 distinct task
+    # rows, the score-bucket-dedup regime (Q_eff = 64 << Q = 512)
+    n, q = 2048, 512
+    ks = jax.random.split(jax.random.PRNGKey(99), 5)
+    node = NodeState.zeros(n)._replace(
+        est_usage=jax.random.uniform(ks[0], (n, 2)) * 0.6,
+        reserved=jax.random.uniform(ks[1], (n, 2)) * 0.05,
+        n_tasks=jax.random.randint(ks[2], (n,), 2, 8),
+        src_count=jax.random.randint(ks[3], (n, 64), 0, 4))
+    shapes = jax.random.uniform(ks[4], (8, 2)) * 0.15
+    reqs = shapes[jnp.arange(q) % 8]
+    srcs = (jnp.arange(q, dtype=jnp.int32) // 8) % 8
+    prios = jnp.zeros((q,), jnp.int32)
+    rows.extend(_wavefront_rows(f"dup_n{n}_q{q}", n, q, node, reqs, srcs,
+                                prios))
     return rows

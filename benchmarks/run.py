@@ -3,15 +3,23 @@
 Prints ``name,us_per_call,derived`` CSV.  REPRO_FULL=1 switches to
 paper-scale configs (4000 nodes / 288 slots / ~700k tasks).
 
-``--json`` additionally writes one ``BENCH_<name>.json`` per bench run
-(e.g. ``BENCH_scheduler_throughput.json``) with the same rows as
-structured records, so the perf trajectory is machine-trackable across
-PRs: ``python benchmarks/run.py --json bench_scheduler_throughput``.
+``--json`` additionally records each bench run into ``BENCH_<name>.json``
+(e.g. ``BENCH_scheduler_throughput.json``).  The file is MERGE-APPENDED,
+not overwritten: it holds ``{"bench": ..., "runs": [...]}`` where every
+run carries the rows plus the git commit and a UTC timestamp, so the
+perf trajectory across PRs survives in-repo and
+``scripts/check_bench.py`` can diff the latest run against its
+predecessor.  Legacy bare-list files (pre-trajectory format) are wrapped
+into the first run on first touch.
+
+``python benchmarks/run.py --json bench_scheduler_throughput``.
 """
 from __future__ import annotations
 
+import datetime
 import json
 import os
+import subprocess
 import sys
 import time
 import traceback
@@ -30,11 +38,58 @@ BENCHES = [
 ]
 
 
+def _git_commit() -> str:
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            capture_output=True, text=True, check=True,
+        ).stdout.strip() or "unknown"
+    except Exception:
+        return "unknown"
+
+
+def record_run(path: str, bench: str, rows, *, commit: str,
+               timestamp: str) -> dict:
+    """Merge-append one bench run into the trajectory file at ``path``.
+
+    Returns the full document written.  Pre-existing content is kept:
+    the current schema appends to ``runs``; a legacy bare row list is
+    wrapped into a first run with ``commit="pre-history"`` so old
+    baselines stay diffable.  Unreadable files are replaced (with a
+    warning) rather than crashing the bench run.
+    """
+    doc = {"bench": bench, "runs": []}
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                prev = json.load(f)
+            if isinstance(prev, list):  # legacy format: bare row list
+                doc["runs"] = [{"commit": "pre-history", "timestamp": None,
+                                "rows": prev}]
+            elif isinstance(prev, dict) and isinstance(prev.get("runs"),
+                                                       list):
+                doc["runs"] = prev["runs"]
+            else:
+                print(f"# warning: {path} has an unrecognized shape "
+                      f"(no 'runs' list); starting a fresh trajectory",
+                      file=sys.stderr)
+        except (OSError, json.JSONDecodeError) as e:
+            print(f"# warning: could not merge {path} ({e}); rewriting",
+                  file=sys.stderr)
+    doc["runs"].append({"commit": commit, "timestamp": timestamp,
+                        "rows": rows})
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1)
+    return doc
+
+
 def main() -> None:
     full = os.environ.get("REPRO_FULL", "0") == "1"
     args = sys.argv[1:]
     write_json = "--json" in args
     only = [a for a in args if a != "--json"] or None
+    commit = _git_commit()
+    timestamp = datetime.datetime.now(datetime.timezone.utc).isoformat()
     print("name,us_per_call,derived")
     t_start = time.time()
     failures = 0
@@ -48,11 +103,13 @@ def main() -> None:
             for row in rows:
                 print(row.csv(), flush=True)
             if write_json:
-                out = f"BENCH_{mod_name.removeprefix('bench_')}.json"
-                with open(out, "w") as f:
-                    json.dump([{"name": r.name, "us_per_call": r.us_per_call,
-                                **r.derived} for r in rows], f, indent=1)
-                print(f"# wrote {out}", flush=True)
+                bench = mod_name.removeprefix("bench_")
+                out = f"BENCH_{bench}.json"
+                record_run(out, bench,
+                           [{"name": r.name, "us_per_call": r.us_per_call,
+                             **r.derived} for r in rows],
+                           commit=commit, timestamp=timestamp)
+                print(f"# appended run {commit} to {out}", flush=True)
         except Exception as e:
             failures += 1
             print(f"{mod_name},0,ERROR={type(e).__name__}:{e}", flush=True)

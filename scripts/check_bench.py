@@ -1,0 +1,147 @@
+#!/usr/bin/env python
+"""Bench-trajectory guard: BENCH_*.json must stay schema-valid and honest.
+
+``benchmarks/run.py --json`` merge-appends one run per invocation into
+``BENCH_<name>.json`` (``{"bench": ..., "runs": [{"commit", "timestamp",
+"rows"}, ...]}``).  This script validates that schema and diffs the
+latest run against its predecessor:
+
+  * SCHEMA problems (wrong shape, missing fields, non-numeric metrics)
+    always fail — a malformed trajectory file silently kills the perf
+    record this repo relies on across PRs;
+  * REGRESSIONS — a row whose ``decisions_per_s`` dropped more than
+    ``THRESHOLD`` (20%) vs the same-named row in the previous run — are
+    *flagged* on stdout and only fail under ``--strict``.  Timing noise
+    on shared CI machines makes hard-failing on wall-clock a flaky-test
+    factory; the tier-1 wiring (``tests/test_bench_schema.py``) runs the
+    schema check strictly and surfaces regressions as warnings.
+
+Run standalone: ``python scripts/check_bench.py [--strict] [files...]``
+(default: every ``BENCH_*.json`` in the repo root).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import numbers
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+
+THRESHOLD = 0.20  # fractional decisions/sec drop that counts as a regression
+METRIC = "decisions_per_s"
+
+
+def schema_problems(path: str, doc) -> list:
+    """Return human-readable schema violations for one trajectory doc."""
+    out = []
+    if isinstance(doc, list):
+        out.append(f"{path}: legacy bare-list format; re-record via "
+                   f"benchmarks/run.py --json to migrate")
+        return out
+    if not isinstance(doc, dict):
+        return [f"{path}: top level must be an object, got "
+                f"{type(doc).__name__}"]
+    if not isinstance(doc.get("bench"), str) or not doc.get("bench"):
+        out.append(f"{path}: missing/empty 'bench' name")
+    runs = doc.get("runs")
+    if not isinstance(runs, list) or not runs:
+        out.append(f"{path}: 'runs' must be a non-empty list")
+        return out
+    for i, run in enumerate(runs):
+        where = f"{path}: runs[{i}]"
+        if not isinstance(run, dict):
+            out.append(f"{where}: must be an object")
+            continue
+        if not isinstance(run.get("commit"), str) or not run.get("commit"):
+            out.append(f"{where}: missing/empty 'commit'")
+        if not (run.get("timestamp") is None
+                or isinstance(run.get("timestamp"), str)):
+            out.append(f"{where}: 'timestamp' must be a string or null")
+        rows = run.get("rows")
+        if not isinstance(rows, list) or not rows:
+            out.append(f"{where}: 'rows' must be a non-empty list")
+            continue
+        seen = set()
+        for j, row in enumerate(rows):
+            rwhere = f"{where}.rows[{j}]"
+            if not isinstance(row, dict):
+                out.append(f"{rwhere}: must be an object")
+                continue
+            name = row.get("name")
+            if not isinstance(name, str) or not name:
+                out.append(f"{rwhere}: missing/empty 'name'")
+            elif name in seen:
+                out.append(f"{rwhere}: duplicate row name {name!r}")
+            else:
+                seen.add(name)
+            for key, val in row.items():
+                if key == "name":
+                    continue
+                if not isinstance(val, numbers.Real):
+                    out.append(f"{rwhere}: metric {key!r} must be numeric, "
+                               f"got {type(val).__name__}")
+            us = row.get("us_per_call")
+            if not isinstance(us, numbers.Real):
+                out.append(f"{rwhere}: missing numeric 'us_per_call'")
+            elif us < 0:
+                out.append(f"{rwhere}: us_per_call must be >= 0")
+    return out
+
+
+def regressions(doc) -> list:
+    """Rows of the latest run whose decisions/sec regressed > THRESHOLD
+    vs the same-named row of the previous run."""
+    runs = doc.get("runs", []) if isinstance(doc, dict) else []
+    if len(runs) < 2:
+        return []
+    def metric_map(run):
+        return {row["name"]: row[METRIC] for row in run.get("rows", [])
+                if isinstance(row, dict) and isinstance(row.get(METRIC),
+                                                        numbers.Real)
+                and isinstance(row.get("name"), str)}
+    base, latest = metric_map(runs[-2]), metric_map(runs[-1])
+    out = []
+    for name, val in latest.items():
+        ref = base.get(name)
+        if ref and ref > 0 and val < (1.0 - THRESHOLD) * ref:
+            out.append(
+                f"{name}: {METRIC} {val:.1f} is "
+                f"{(1 - val / ref) * 100:.0f}% below run "
+                f"{runs[-2].get('commit', '?')} ({ref:.1f})")
+    return out
+
+
+def main(argv=None) -> int:
+    args = list(sys.argv[1:] if argv is None else argv)
+    strict = "--strict" in args
+    files = [a for a in args if a != "--strict"] or sorted(
+        glob.glob(str(ROOT / "BENCH_*.json")))
+    if not files:
+        print("check_bench: no BENCH_*.json files found")
+        return 0
+    bad_schema, flagged = [], []
+    for path in files:
+        try:
+            with open(path) as f:
+                doc = json.load(f)
+        except (OSError, json.JSONDecodeError) as e:
+            bad_schema.append(f"{path}: unreadable ({e})")
+            continue
+        bad_schema.extend(schema_problems(path, doc))
+        flagged.extend(f"{path}: {r}" for r in regressions(doc))
+    for p in bad_schema:
+        print(f"bench schema: {p}", file=sys.stderr)
+    for r in flagged:
+        print(f"bench regression: {r}")
+    if not bad_schema and not flagged:
+        print(f"bench trajectories OK ({len(files)} file(s))")
+    elif not bad_schema:
+        print(f"bench schema OK; {len(flagged)} regression(s) flagged"
+              + ("" if strict else " (advisory; use --strict to fail)"))
+    return 1 if bad_schema or (strict and flagged) else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -13,6 +13,11 @@ Fails (exit 1 / non-empty problem list) when:
     how its math maps onto the kernel template);
   * the admission core exposes wavefront batched admission but
     ``docs/kernels.md`` lost its "Batched wavefront admission" section;
+  * the kernel package exposes the top-K candidate primitive but
+    ``docs/kernels.md`` lost its "Top-K candidate lists" section;
+  * ``SimConfig`` carries wavefront tuning knobs (``wavefront_topk``,
+    ``dedup_buckets``, ``wavefront_tie_margin``) that ``docs/api.md``
+    does not document;
   * a cross-linked docs file (``docs/kernels.md``) has gone missing.
 
 Run standalone (``python scripts/check_docs.py``) or through the tier-1
@@ -83,6 +88,18 @@ def problems() -> list:
                 "repro.api.admission exposes admit_queue_wavefront but "
                 "docs/kernels.md has no 'Batched wavefront admission' "
                 "section")
+        from repro.kernels import flex_score as _fs
+        if (hasattr(_fs, "flex_pick_node_batch_topk")
+                and "## Top-K candidate lists" not in kernels_md):
+            out.append(
+                "repro.kernels.flex_score exposes flex_pick_node_batch_topk "
+                "but docs/kernels.md has no 'Top-K candidate lists' section")
+
+    from repro.core.types import SimConfig
+    for knob in ("wavefront_topk", "dedup_buckets", "wavefront_tie_margin"):
+        if knob in SimConfig._fields and f"`{knob}`" not in api_md:
+            out.append(
+                f"SimConfig field {knob!r} is not documented in docs/api.md")
 
     table = _registry_table_rows(api_md)
     for name in list_policies():

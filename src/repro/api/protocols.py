@@ -63,10 +63,12 @@ class PlacementPolicy(Protocol):
     #   this hook over the queue: node-side leaves (est_usage, reserved)
     #   must NOT depend on the task (out_axes=None enforces it — the (N,R)
     #   arrays are shared by the whole queue, never (Q,N,R)); src_frac and
-    #   the four scalars may.  The wavefront conflict check additionally
-    #   assumes the canonical node-state mapping (est_usage admission-
-    #   invariant, reserved = node.reserved, src_frac =
-    #   src_count[:, src]/max(n_tasks, 1) when w_src != 0); custom hooks
+    #   the four scalars may.  The wavefront conflict checks (and the
+    #   score-bucket dedup, which keys a task's whole score row on
+    #   (request, penalty, cap, w_load, w_src, src)) additionally assume
+    #   the canonical node-state mapping: est_usage and the four scalars
+    #   admission-invariant, reserved = node.reserved, src_frac =
+    #   src_count[:, src]/max(n_tasks, 1) when w_src != 0.  Custom hooks
     #   violating it must keep wavefront off.  See docs/kernels.md,
     #   "Batched wavefront admission".
 

@@ -93,6 +93,9 @@ def schedule_queue(
     use_kernel: bool = False,
     interpret: bool = False,
     batch_mode: bool = False,
+    topk: int = 8,
+    dedup_buckets: int = 64,
+    tie_margin: float = 1e-5,
 ) -> Tuple[NodeState, jnp.ndarray]:
     """Place a queue of tasks in queue order.  Returns (state, placements (Q,)).
 
@@ -102,8 +105,9 @@ def schedule_queue(
     ``priorities``; it defaults to all-batch when omitted.
     ``use_kernel``/``interpret`` select the fused Pallas filter+score path
     for kernel-capable policies; ``batch_mode`` admits the queue in
-    wavefront rounds over the batched kernel instead of the sequential
-    scan — same decisions, fewer node-table sweeps (docs/kernels.md).
+    wavefront rounds over the batched top-K kernel instead of the
+    sequential scan — same decisions, fewer node-table sweeps
+    (``topk``/``dedup_buckets``/``tie_margin`` tune it, docs/kernels.md).
     """
     from repro.api.admission import admit_queue
     from repro.api.registry import resolve_policy
@@ -114,7 +118,8 @@ def schedule_queue(
     return admit_queue(policy, node, requests, src_buckets, priorities,
                        valid, penalty, params,
                        use_kernel=use_kernel, interpret=interpret,
-                       batch_mode=batch_mode)
+                       batch_mode=batch_mode, topk=topk,
+                       dedup_buckets=dedup_buckets, tie_margin=tie_margin)
 
 
 # ---------------------------------------------------------------------------

@@ -27,8 +27,11 @@ scan dispatches to the fused Pallas filter+score kernel
 ``kernel_inputs`` hook — one kernel call per placement, the whole decision
 step compiles into the scan body.  ``SimConfig(admission_mode="wavefront")``
 replaces the per-task scan with conflict-resolution rounds over the
-BATCHED kernel (one node-table sweep scores the whole queue; decisions
-stay bit-identical to the sequential scan — docs/kernels.md).
+BATCHED kernel: one top-K sweep (``wavefront_topk``, score-bucket dedup
+via ``dedup_buckets``) caches per-task candidate lists and the rounds
+fall back through them, re-sweeping only when a candidate list is
+provably stale (decisions stay bit-identical to the sequential scan —
+docs/kernels.md; ``wavefront_tie_margin`` tunes the conservatism).
 ``kernel_interpret=True`` runs either kernel through the Pallas
 interpreter (pure XLA) so CPU tests exercise the identical tiling/masking
 logic; see docs/kernels.md.
@@ -193,7 +196,9 @@ def simulate_core(
             policy, node, ts.request[qi], ts.src[qi], ts.priority[qi],
             valid, ctrl.penalty, params,
             use_kernel=cfg.use_kernel, interpret=cfg.kernel_interpret,
-            batch_mode=cfg.admission_mode == "wavefront")
+            batch_mode=cfg.admission_mode == "wavefront",
+            topk=cfg.wavefront_topk, dedup_buckets=cfg.dedup_buckets,
+            tie_margin=cfg.wavefront_tie_margin)
 
         ok = valid & (placed_idx >= 0)
         # scatter placements (unique ids per slot; -1 slots write a no-op max)

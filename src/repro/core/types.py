@@ -151,6 +151,19 @@ class SimConfig(NamedTuple):
                                         # hook keep the sequential scan.
     max_retries: int = 16          # admission failures before a task is dropped
                                    # (counted into n_rejected); static for jit
+    wavefront_topk: int = 8        # cached (score, node) candidates per task
+                                   # per wavefront sweep; conflict rounds fall
+                                   # back through the list instead of
+                                   # re-sweeping the node table.  0 = legacy
+                                   # one-sweep-per-round loop (docs/kernels.md)
+    dedup_buckets: int = 64        # score-bucket dedup width for wavefront
+                                   # sweeps: <= this many distinct task rows
+                                   # collapse the kernel's task matrix to one
+                                   # row per bucket.  0 disables dedup
+    wavefront_tie_margin: float = 1e-5  # relative margin of the wavefront
+                                        # conflict checks: larger = more
+                                        # conservative (extra rounds/sweeps,
+                                        # never wrong decisions)
 
 
 class SlotMetrics(NamedTuple):

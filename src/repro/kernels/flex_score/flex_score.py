@@ -111,6 +111,57 @@ def _batch_kernel(est_ref, res_ref, src_ref, task_ref, out_max_ref,
     out_idx_ref[0, :] = jnp.where(best > NEG_INF / 2, t * tile + arg, -1)
 
 
+def _batch_topk_kernel(est_ref, res_ref, src_ref, task_ref, out_max_ref,
+                       out_idx_ref, *, tile: int, n_valid: int, k: int):
+    """Per-task top-``k`` (score, idx) candidate list per tile pass.
+
+    Identical float expressions to ``_batch_kernel`` up to the score
+    matrix; the reduction then peels the per-task maximum ``k`` times
+    (argmax, record, mask the winning column to NEG_INF).  Each peel is
+    ``jnp.argmax``, so ties break toward the lowest node index and slot
+    ``j`` of a task's list holds its (j+1)-th best node — the list is
+    sorted by (score desc, node idx asc), which is what makes the
+    cross-tile merge in the wrapper reproduce the full-table top-k
+    bit-for-bit (docs/kernels.md, "Top-K candidate lists").
+    """
+    t = pl.program_id(0)
+    est = est_ref[...].astype(jnp.float32)          # (tile, R)
+    res = res_ref[...].astype(jnp.float32)          # (tile, R)
+    src = src_ref[...].astype(jnp.float32)          # (Q, tile)
+    task = task_ref[...].astype(jnp.float32)        # (Q, R+4)
+    R = est.shape[1]
+    r = task[:, :R]
+    penalty = task[:, R]
+    cap = task[:, R + 1]
+    w_load = task[:, R + 2]
+    w_src = task[:, R + 3]
+
+    feasible = None
+    maxload = None
+    for j in range(R):
+        load_j = penalty[:, None] * est[None, :, j] + res[None, :, j]
+        fit_j = load_j + r[:, j][:, None] <= cap[:, None]
+        feasible = fit_j if feasible is None else jnp.logical_and(feasible,
+                                                                  fit_j)
+        maxload = load_j if maxload is None else jnp.maximum(maxload, load_j)
+
+    rows = t * tile + jax.lax.broadcasted_iota(jnp.int32, (1, tile), 1)
+    feasible = jnp.logical_and(feasible, rows < n_valid)
+    score = -(w_load[:, None] * maxload + w_src[:, None] * src)
+    score = jnp.where(feasible, score, NEG_INF)
+
+    cols = jax.lax.broadcasted_iota(jnp.int32, score.shape, 1)
+    for j in range(k):
+        best = jnp.max(score, axis=1)               # (Q,)
+        arg = jnp.argmax(score, axis=1).astype(jnp.int32)
+        out_max_ref[j, :] = best
+        out_idx_ref[j, :] = jnp.where(best > NEG_INF / 2, t * tile + arg, -1)
+        # Knock the winner out so the next peel finds the runner-up.  Once
+        # every real candidate is spent the peel keeps returning NEG_INF
+        # slots (idx -1), so k may exceed tile or the feasible count.
+        score = jnp.where(cols == arg[:, None], NEG_INF, score)
+
+
 @functools.partial(jax.jit, static_argnames=("tile", "interpret"))
 def flex_score_tiles(est, reserved, src_frac, task_vec, *, tile=512,
                      interpret=False):
@@ -207,6 +258,60 @@ def flex_score_batch_tiles(est, reserved, src_frac, task_mat, *, tile=512,
         out_shape=[
             jax.ShapeDtypeStruct((ntiles, Qp), jnp.float32),
             jax.ShapeDtypeStruct((ntiles, Qp), jnp.int32),
+        ],
+        interpret=interpret,
+    )(est, reserved, src_frac, task_mat)
+    return out_max[:, :Q], out_idx[:, :Q]
+
+
+@functools.partial(jax.jit, static_argnames=("k", "tile", "interpret"))
+def flex_score_batch_topk_tiles(est, reserved, src_frac, task_mat, *, k=8,
+                                tile=512, interpret=False):
+    """Per-tile top-``k`` (score, idx) candidate partials for a whole queue.
+
+    Same inputs and padding rules as ``flex_score_batch_tiles``; instead
+    of one (max, argmax) pair per tile, each grid step emits its ``k``
+    best candidates per task (sorted by score desc, node idx asc — see
+    ``_batch_topk_kernel``).
+
+    Returns (tile_max (ntiles*k, Q), tile_idx (ntiles*k, Q)): row
+    ``t*k + j`` holds tile ``t``'s (j+1)-th best candidate for each task,
+    so the row order is tile-major — for equal scores, earlier rows hold
+    lower global node indices, which the cross-tile merge in
+    ``flex_pick_node_batch_topk`` relies on for exact argmax tie parity.
+    Slots past a tile's feasible count are (NEG_INF, -1).
+    """
+    N, R = est.shape
+    Q = task_mat.shape[0]
+    tile = max(1, min(tile, N))
+    ntiles = pl.cdiv(N, tile)
+    pad = ntiles * tile - N
+    if pad:
+        est = jnp.pad(est, ((0, pad), (0, 0)))
+        reserved = jnp.pad(reserved, ((0, pad), (0, 0)))
+        src_frac = jnp.pad(src_frac, ((0, 0), (0, pad)))
+    qpad = (-Q) % 8
+    if qpad:
+        task_mat = jnp.pad(task_mat, ((0, qpad), (0, 0)))
+        src_frac = jnp.pad(src_frac, ((0, qpad), (0, 0)))
+    Qp = Q + qpad
+    kernel = functools.partial(_batch_topk_kernel, tile=tile, n_valid=N, k=k)
+    out_max, out_idx = pl.pallas_call(
+        kernel,
+        grid=(ntiles,),
+        in_specs=[
+            pl.BlockSpec((tile, R), lambda t: (t, 0)),
+            pl.BlockSpec((tile, R), lambda t: (t, 0)),
+            pl.BlockSpec((Qp, tile), lambda t: (0, t)),
+            pl.BlockSpec((Qp, R + 4), lambda t: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((k, Qp), lambda t: (t, 0)),
+            pl.BlockSpec((k, Qp), lambda t: (t, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((ntiles * k, Qp), jnp.float32),
+            jax.ShapeDtypeStruct((ntiles * k, Qp), jnp.int32),
         ],
         interpret=interpret,
     )(est, reserved, src_frac, task_mat)

@@ -8,6 +8,7 @@ hold them bit-for-bit equal.
 """
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 from repro.kernels.flex_score.flex_score import NEG_INF
@@ -54,3 +55,34 @@ def pick_node_batch_ref(est, reserved, src_frac, r_task, penalty, w_load,
     idx = jnp.where(any_feasible, jnp.argmax(score, axis=-1),
                     -1).astype(jnp.int32)
     return idx, jnp.max(score, axis=-1), any_feasible
+
+
+def pick_node_batch_topk_ref(est, reserved, src_frac, r_task, penalty,
+                             w_load, w_src, cap=1.0, k=8):
+    """Top-``k`` oracle: each task's k best candidates over the node table.
+
+    Shapes as in ``pick_node_batch_ref``.  ``jax.lax.top_k`` sorts by
+    score descending with ties broken toward the lowest node index —
+    exactly ``jnp.argmax``'s tie rule, applied k-deep — so column 0 of
+    the result IS the ``pick_node_batch_ref`` decision and the kernel's
+    tile-wise peel + cross-tile merge must match every column bit-for-bit.
+
+    Returns (idx (Q, k), score (Q, k), any_feasible (Q,)); slots past a
+    task's feasible-node count are (-1, NEG_INF).
+    """
+    load = penalty[:, None, None] * est[None] + reserved[None]  # (Q, N, R)
+    feasible = jnp.all(load + r_task[:, None, :] <= cap[:, None, None],
+                       axis=-1)                                 # (Q, N)
+    score = -(w_load[:, None] * jnp.max(load, axis=-1)
+              + w_src[:, None] * src_frac)
+    score = jnp.where(feasible, score, NEG_INF)
+    N = score.shape[1]
+    best, idx = jax.lax.top_k(score, min(k, N))
+    if k > N:   # fewer nodes than candidate slots: pad with empty slots
+        Q = score.shape[0]
+        best = jnp.concatenate(
+            [best, jnp.full((Q, k - N), NEG_INF, best.dtype)], axis=1)
+        idx = jnp.concatenate(
+            [idx, jnp.full((Q, k - N), -1, idx.dtype)], axis=1)
+    idx = jnp.where(best > NEG_INF / 2, idx, -1).astype(jnp.int32)
+    return idx, best, best[:, 0] > NEG_INF / 2

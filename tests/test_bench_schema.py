@@ -1,0 +1,125 @@
+"""Tier-1 wiring for the bench-trajectory guard (scripts/check_bench.py).
+
+BENCH_*.json is the in-repo perf record: ``benchmarks/run.py --json``
+merge-appends one run per invocation and ``check_bench.py`` validates the
+schema + flags >20% decisions/sec regressions vs the previous run.  The
+schema check is tier-1 (a malformed trajectory silently kills the record);
+regressions stay advisory here because CI wall-clock is noisy — the
+subprocess run below therefore omits ``--strict``.
+"""
+import importlib.util
+import json
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+spec = importlib.util.spec_from_file_location(
+    "check_bench", ROOT / "scripts" / "check_bench.py")
+check_bench = importlib.util.module_from_spec(spec)
+spec.loader.exec_module(check_bench)
+
+
+def _doc(runs):
+    return {"bench": "demo", "runs": runs}
+
+
+def _run(commit, rows):
+    return {"commit": commit, "timestamp": "2026-07-31T00:00:00+00:00",
+            "rows": rows}
+
+
+def test_repo_bench_files_pass():
+    proc = subprocess.run(
+        [sys.executable, str(ROOT / "scripts" / "check_bench.py")],
+        capture_output=True, text=True)
+    assert proc.returncode == 0, (
+        f"BENCH_*.json trajectory drifted from the schema:\n"
+        f"{proc.stderr}\n{proc.stdout}")
+
+
+def test_valid_doc_has_no_problems():
+    doc = _doc([_run("abc1234", [{"name": "x", "us_per_call": 1.5,
+                                  "decisions_per_s": 100.0}])])
+    assert check_bench.schema_problems("f", doc) == []
+    assert check_bench.regressions(doc) == []
+
+
+@pytest.mark.parametrize("mutate,needle", [
+    (lambda d: d.pop("bench"), "bench"),
+    (lambda d: d.update(runs=[]), "runs"),
+    (lambda d: d["runs"][0].pop("commit"), "commit"),
+    (lambda d: d["runs"][0].update(rows=[]), "rows"),
+    (lambda d: d["runs"][0]["rows"][0].pop("name"), "name"),
+    (lambda d: d["runs"][0]["rows"][0].pop("us_per_call"), "us_per_call"),
+    (lambda d: d["runs"][0]["rows"][0].update(decisions_per_s="fast"),
+     "numeric"),
+    (lambda d: d["runs"][0]["rows"].append(
+        dict(d["runs"][0]["rows"][0])), "duplicate"),
+])
+def test_schema_violations_are_reported(mutate, needle):
+    doc = _doc([_run("abc1234", [{"name": "x", "us_per_call": 1.5,
+                                  "decisions_per_s": 100.0}])])
+    mutate(doc)
+    probs = check_bench.schema_problems("f", doc)
+    assert probs and any(needle in p for p in probs), probs
+
+
+def test_legacy_bare_list_is_flagged():
+    probs = check_bench.schema_problems("f", [{"name": "x",
+                                               "us_per_call": 1.0}])
+    assert probs and "legacy" in probs[0]
+
+
+def test_regression_flagged_only_past_threshold():
+    ok = _doc([_run("a", [{"name": "x", "us_per_call": 1.0,
+                           "decisions_per_s": 100.0}]),
+               _run("b", [{"name": "x", "us_per_call": 1.0,
+                           "decisions_per_s": 85.0}])])
+    assert check_bench.regressions(ok) == []          # -15%: inside noise
+    bad = _doc([_run("a", [{"name": "x", "us_per_call": 1.0,
+                            "decisions_per_s": 100.0}]),
+                _run("b", [{"name": "x", "us_per_call": 1.0,
+                            "decisions_per_s": 70.0}])])
+    flags = check_bench.regressions(bad)              # -30%: flagged
+    assert len(flags) == 1 and "x" in flags[0]
+    # rows present only in one run never flag (new/retired benches)
+    new = _doc([_run("a", [{"name": "x", "us_per_call": 1.0,
+                            "decisions_per_s": 100.0}]),
+                _run("b", [{"name": "y", "us_per_call": 1.0,
+                            "decisions_per_s": 1.0}])])
+    assert check_bench.regressions(new) == []
+
+
+def test_strict_flag_gates_exit_code(tmp_path):
+    path = tmp_path / "BENCH_demo.json"
+    path.write_text(json.dumps(
+        _doc([_run("a", [{"name": "x", "us_per_call": 1.0,
+                          "decisions_per_s": 100.0}]),
+              _run("b", [{"name": "x", "us_per_call": 1.0,
+                          "decisions_per_s": 50.0}])])))
+    assert check_bench.main([str(path)]) == 0         # advisory by default
+    assert check_bench.main(["--strict", str(path)]) == 1
+
+
+def test_record_run_migrates_legacy_and_appends(tmp_path):
+    sys.path.insert(0, str(ROOT))
+    try:
+        from benchmarks.run import record_run
+    finally:
+        sys.path.pop(0)
+    path = tmp_path / "BENCH_demo.json"
+    path.write_text(json.dumps([{"name": "x", "us_per_call": 1.0}]))
+    doc = record_run(str(path), "demo",
+                     [{"name": "x", "us_per_call": 2.0}],
+                     commit="abc", timestamp="t")
+    assert [r["commit"] for r in doc["runs"]] == ["pre-history", "abc"]
+    doc = record_run(str(path), "demo",
+                     [{"name": "x", "us_per_call": 3.0}],
+                     commit="def", timestamp="t2")
+    assert [r["commit"] for r in doc["runs"]] == ["pre-history", "abc",
+                                                  "def"]
+    assert check_bench.schema_problems(str(path), doc) == []

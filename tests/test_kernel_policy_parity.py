@@ -13,7 +13,10 @@ The wavefront tests extend the same contract to batched admission
 conflict-round commits must be placement-for-placement identical to the
 sequential scan, including on an adversarial queue where every task wants
 the same node (one commit per round — the worst case the prefix rule
-must survive, docs/kernels.md).
+must survive, docs/kernels.md).  Parity must hold across the whole knob
+grid: the legacy one-sweep-per-round loop (topk=0), top-K candidate
+caching (topk>0, incl. the K=1 argmax-reduction), and score-bucket dedup
+on/off over duplicate-heavy and all-unique queues.
 """
 import jax
 import jax.numpy as jnp
@@ -139,12 +142,18 @@ def _queue(Q, key, n_src=64):
     return reqs, srcs, prios
 
 
+# (topk, dedup_buckets) knob grid: legacy one-sweep-per-round loop,
+# K=1 (argmax-reduction), the K=8 default with and without dedup.
+WAVEFRONT_KNOBS = [(0, 0), (1, 64), (8, 64), (8, 0)]
+
+
 @pytest.mark.parametrize("name", KERNEL_POLICIES)
 @pytest.mark.parametrize("n", [5, 100, 513])
 def test_wavefront_queue_matches_sequential(name, n):
     # admit_queue(batch_mode=True) vs the sequential scan: identical
     # placements AND identical final NodeState, including padding entries
-    # (valid=False tail) and tasks that find no feasible node.
+    # (valid=False tail) and tasks that find no feasible node — under the
+    # default knobs (topk=8 + dedup).
     pol = get_policy(name)
     params = FlexParams.default()
     for seed in range(3):
@@ -163,15 +172,78 @@ def test_wavefront_queue_matches_sequential(name, n):
             np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
+@pytest.mark.parametrize("topk,dedup", WAVEFRONT_KNOBS)
+def test_wavefront_knob_grid_matches_sequential(topk, dedup):
+    # Property: every knob combination produces the SAME decisions — the
+    # knobs trade sweeps for rounds, never correctness.  One policy, a
+    # tile-boundary N, three seeds (the per-policy sweep runs above).
+    pol = get_policy("flex-f")
+    params = FlexParams.default()
+    for seed in range(3):
+        node = _node_state(513, jax.random.PRNGKey(seed))
+        Q = 48
+        reqs, srcs, prios = _queue(Q, jax.random.PRNGKey(seed + 50))
+        valid = jnp.arange(Q) < Q - 4
+        pen = jnp.asarray(1.2)
+        ns_s, pl_s = admission.admit_queue(pol, node, reqs, srcs, prios,
+                                           valid, pen, params)
+        ns_w, pl_w = admission.admit_queue(
+            pol, node, reqs, srcs, prios, valid, pen, params,
+            batch_mode=True, interpret=True, topk=topk,
+            dedup_buckets=dedup)
+        np.testing.assert_array_equal(np.asarray(pl_s), np.asarray(pl_w))
+        for a, b in zip(ns_s, ns_w):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("dup_heavy", [True, False])
+def test_wavefront_dedup_queue_regimes(dup_heavy):
+    # Score-bucket dedup on a duplicate-heavy queue (4 shapes x 3
+    # sources = 12 distinct rows << dedup_buckets: the compacted kernel
+    # branch) and an all-unique queue wider than the bucket budget (the
+    # full-width fallback branch) — decisions identical to the sequential
+    # scan and to the dedup-off wavefront in both regimes.
+    pol = get_policy("flex-f")
+    params = FlexParams.default()
+    Q = 48
+    node = _node_state(100, jax.random.PRNGKey(7))
+    if dup_heavy:
+        shapes = jax.random.uniform(jax.random.PRNGKey(1), (4, 2)) * 0.15
+        reqs = shapes[jnp.arange(Q) % 4]
+        srcs = (jnp.arange(Q, dtype=jnp.int32) // 4) % 3
+        dedup = 16   # 12 distinct rows fit: dedup branch taken
+    else:
+        reqs, srcs, _ = _queue(Q, jax.random.PRNGKey(2))
+        dedup = 16   # 48 distinct rows overflow: full-width fallback
+    prios = jnp.zeros((Q,), jnp.int32)
+    valid = jnp.ones((Q,), bool)
+    pen = jnp.asarray(1.2)
+    ns_s, pl_s = admission.admit_queue(pol, node, reqs, srcs, prios, valid,
+                                       pen, params)
+    ns_w, pl_w = admission.admit_queue(pol, node, reqs, srcs, prios, valid,
+                                       pen, params, batch_mode=True,
+                                       interpret=True, dedup_buckets=dedup)
+    ns_o, pl_o = admission.admit_queue(pol, node, reqs, srcs, prios, valid,
+                                       pen, params, batch_mode=True,
+                                       interpret=True, dedup_buckets=0)
+    np.testing.assert_array_equal(np.asarray(pl_s), np.asarray(pl_w))
+    np.testing.assert_array_equal(np.asarray(pl_s), np.asarray(pl_o))
+    for a, b in zip(ns_s, ns_w):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
 @pytest.mark.parametrize("name", KERNEL_POLICIES)
-def test_wavefront_adversarial_single_hot_node(name):
+@pytest.mark.parametrize("topk", [0, 8])
+def test_wavefront_adversarial_single_hot_node(name, topk):
     # Every task from the same source, one node far emptier than the rest:
-    # every round, all pending tasks pick that node, so the prefix rule
-    # commits exactly one task per round until the node fills.  This is
-    # the degenerate case where the naive "commit unless an earlier task
-    # picked the same node" shortcut would still work by accident — but
-    # the decisions must match the sequential scan exactly, commit order
-    # included.
+    # all pending tasks pick that node, so the dup rule admits one task at
+    # a time until the node fills.  This is the degenerate case where the
+    # naive "commit unless an earlier task picked the same node" shortcut
+    # would still work by accident — but the decisions must match the
+    # sequential scan exactly, commit order included.  With candidate
+    # caching the hot node goes dirty after the first commit and the
+    # dirty-refresh keeps deciding it EXACTLY without re-sweeping, so the
+    # sweep count stays far below the legacy loop's one-per-round.
     pol = get_policy(name)
     params = FlexParams.default()
     n, Q = 33, 24
@@ -185,19 +257,32 @@ def test_wavefront_adversarial_single_hot_node(name):
     pen = jnp.asarray(1.0)
     ns_s, pl_s = admission.admit_queue(pol, node, reqs, srcs, prios, valid,
                                        pen, params)
-    ns_w, pl_w, rounds = admission.admit_queue_wavefront(
+    ns_w, pl_w, rounds, sweeps = admission.admit_queue_wavefront(
         pol, node, reqs, srcs, prios, valid, pen, params, interpret=True,
-        with_rounds=True)
+        topk=topk, with_rounds=True)
     np.testing.assert_array_equal(np.asarray(pl_s), np.asarray(pl_w))
     for a, b in zip(ns_s, ns_w):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
-    # identical tasks => identical candidates => ~one commit per round
-    assert int(rounds) >= int((pl_w >= 0).sum()) > 0
+    placed = int((pl_w >= 0).sum())
+    assert placed > 0
+    if topk == 0:
+        # identical tasks => identical candidates => ~one commit per
+        # round, one sweep per round
+        assert int(rounds) >= placed
+        assert int(sweeps) == int(rounds)
+    else:
+        # candidate fallback: hot-node contention resolves from the cache
+        assert int(sweeps) < int(rounds)
+        assert int(sweeps) <= placed // 4 + 1
 
 
-def test_wavefront_all_infeasible_finalizes_in_one_round():
-    # No feasible node for anyone: every task finalizes -1 immediately
-    # (feasibility is antitone in load, docs/kernels.md), in one round.
+@pytest.mark.parametrize("topk,expect_rounds", [(0, 1), (8, 0)])
+def test_wavefront_all_infeasible_finalizes_in_one_sweep(topk,
+                                                         expect_rounds):
+    # No feasible node for anyone: every task finalizes -1 off the FIRST
+    # sweep (feasibility is antitone in load, docs/kernels.md).  The
+    # legacy loop counts that sweep as its one round; the candidate-cache
+    # loop finalizes at the epoch head and never enters a commit round.
     pol = get_policy("flex-f")
     params = FlexParams.default()
     n, Q = 70, 16
@@ -205,11 +290,12 @@ def test_wavefront_all_infeasible_finalizes_in_one_round():
     reqs = jnp.full((Q, 2), 0.5)
     valid = jnp.ones((Q,), bool)
     zeros = jnp.zeros((Q,), jnp.int32)
-    ns_w, pl_w, rounds = admission.admit_queue_wavefront(
+    ns_w, pl_w, rounds, sweeps = admission.admit_queue_wavefront(
         pol, node, reqs, zeros, zeros, valid, jnp.asarray(1.0), params,
-        interpret=True, with_rounds=True)
+        interpret=True, topk=topk, with_rounds=True)
     assert (np.asarray(pl_w) == -1).all()
-    assert int(rounds) == 1
+    assert int(sweeps) == 1
+    assert int(rounds) == expect_rounds
     np.testing.assert_array_equal(np.asarray(ns_w.reserved),
                                   np.asarray(node.reserved))
 
@@ -233,6 +319,28 @@ def test_simulator_wavefront_matches_sequential(name, n):
                                   np.asarray(wav.metrics.n_rejected))
     np.testing.assert_allclose(np.asarray(ref.metrics.usage),
                                np.asarray(wav.metrics.usage))
+
+
+def test_simulator_wavefront_knobs_match_sequential():
+    # The SimConfig knobs (wavefront_topk / dedup_buckets /
+    # wavefront_tie_margin) thread through simulate_core: legacy loop,
+    # dedup-off, and a fat tie margin must all reproduce the sequential
+    # run — the knobs move sweeps/rounds, never placements.
+    cfg = WAVE_CFG._replace(n_nodes=100)
+    ts = generate_calibrated(0, cfg.n_nodes, cfg.n_slots, 1.5)
+    ref = run(ts, cfg, "flex-f")
+    for knobs in (dict(wavefront_topk=0),
+                  dict(wavefront_topk=4, dedup_buckets=0),
+                  dict(wavefront_tie_margin=1e-2)):
+        wav = run(ts, cfg._replace(admission_mode="wavefront",
+                                   kernel_interpret=True, **knobs),
+                  "flex-f")
+        np.testing.assert_array_equal(np.asarray(ref.placement),
+                                      np.asarray(wav.placement))
+        np.testing.assert_array_equal(np.asarray(ref.admit_slot),
+                                      np.asarray(wav.admit_slot))
+        np.testing.assert_array_equal(np.asarray(ref.metrics.n_rejected),
+                                      np.asarray(wav.metrics.n_rejected))
 
 
 def test_wavefront_reference_only_policy_falls_back():
