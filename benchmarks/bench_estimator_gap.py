@@ -1,0 +1,64 @@
+"""Estimator gap: predictive estimators + headroom reclamation vs `current`.
+
+The paper's thesis is that allocation far exceeds usage; this bench
+measures how much of that gap a *predictive* estimator lets the
+reclamation pass recover.  All variants run LeastFit admission — the
+request-based baseline with the largest usage-allocation gap — so the
+delta is attributable to the estimator + reclamation alone, not to ULB
+scoring.  Paper-Fig-6/7 style: admitted fraction / utilization /
+QoS-violation per (estimator, reclamation) variant, plus gain rows
+against the no-reclamation `current` baseline.
+
+Acceptance bar (ISSUE): some predictive variant admits >= 1.2x the
+baseline at equal-or-lower QoS-violation fraction.
+"""
+import time
+
+import jax
+
+from benchmarks.common import QOS_TARGET, Row, sim_setup, summarize
+from repro.api import Experiment
+
+# (label, estimator registry name, reclamation on?)
+VARIANTS = [
+    ("current", "current", False),     # baseline: no reclamation
+    ("current_recl", "current", True),
+    ("ewma_recl", "ewma", True),
+    ("quantile_recl", "quantile", True),
+]
+
+
+def run(full: bool):
+    cfg, ts = sim_setup(full)
+    # Pool sized to one slot's arrivals: smaller pools lose most dropped
+    # tasks to overflow before the reclaim pass ever sees them.
+    cfg = cfg._replace(reclaim_pool=cfg.arrivals_per_slot)
+    rows, stats = [], {}
+    for label, est, recl in VARIANTS:
+        run_cfg = cfg._replace(estimator=est, reclamation=recl)
+        exp = Experiment(ts, run_cfg, policy="least-fit")
+        t0 = time.time()
+        res = exp.run()
+        jax.block_until_ready(res.metrics.qos)
+        wall = time.time() - t0
+        s = summarize(ts, res, QOS_TARGET)
+        stats[label] = s
+        rows.append(Row(f"estgap_{label}", wall * 1e6, {
+            "admitted_frac": s["admitted_frac"],
+            "n_admitted": s["n_admitted"],
+            "n_reclaimed": s["n_reclaimed"],
+            "usage_cpu": s["avg_usage_cpu"],
+            "qos_violation_frac": s["qos_violation_frac"],
+            "final_penalty": s["final_penalty"],
+        }))
+    base = stats["current"]
+    for label in ("current_recl", "ewma_recl", "quantile_recl"):
+        s = stats[label]
+        rows.append(Row(f"estgap_{label}_vs_current", 0.0, {
+            "admitted_gain": s["n_admitted"] / max(base["n_admitted"], 1),
+            "usage_gain": s["avg_usage_cpu"]
+            / max(base["avg_usage_cpu"], 1e-9),
+            "qos_violation_delta": s["qos_violation_frac"]
+            - base["qos_violation_frac"],
+        }))
+    return rows

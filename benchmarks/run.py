@@ -32,6 +32,7 @@ BENCHES = [
     "bench_fig9_load_balance",
     "bench_fig10_cluster_size",
     "bench_fig11_demand_scale",
+    "bench_estimator_gap",
     "bench_scheduler_throughput",
     "bench_serving",
     "bench_roofline",

@@ -16,8 +16,12 @@ Fails (exit 1 / non-empty problem list) when:
   * the kernel package exposes the top-K candidate primitive but
     ``docs/kernels.md`` lost its "Top-K candidate lists" section;
   * ``SimConfig`` carries wavefront tuning knobs (``wavefront_topk``,
-    ``dedup_buckets``, ``wavefront_tie_margin``) that ``docs/api.md``
-    does not document;
+    ``dedup_buckets``, ``wavefront_tie_margin``) or estimator/reclamation
+    knobs (``estimator``, ``reclamation``, ``reclaim_margin``,
+    ``reclaim_pool``) that ``docs/api.md`` does not document;
+  * an estimator registered in ``repro.estimators`` is missing from the
+    "Estimators" table in ``docs/api.md`` (or the table lists a name
+    that is not registered);
   * a cross-linked docs file (``docs/kernels.md``) has gone missing.
 
 Run standalone (``python scripts/check_docs.py``) or through the tier-1
@@ -47,6 +51,21 @@ def _registry_table_rows(api_md: str) -> dict:
         if m:
             rows[m.group(1)] = m.group(2).strip()
     return rows
+
+
+def _estimator_table_names(api_md: str) -> set:
+    """Estimator names in the 'Estimators' table of docs/api.md."""
+    names = set()
+    in_section = False
+    for line in api_md.splitlines():
+        if line.startswith("## "):
+            in_section = line.strip() == "## Estimators"
+            continue
+        if in_section:
+            m = re.match(r"\|\s*`([^`]+)`\s*\|", line)
+            if m:
+                names.add(m.group(1))
+    return names
 
 
 def _kernel_mapping_names(kernels_md: str) -> set:
@@ -96,10 +115,25 @@ def problems() -> list:
                 "but docs/kernels.md has no 'Top-K candidate lists' section")
 
     from repro.core.types import SimConfig
-    for knob in ("wavefront_topk", "dedup_buckets", "wavefront_tie_margin"):
+    for knob in ("wavefront_topk", "dedup_buckets", "wavefront_tie_margin",
+                 "estimator", "reclamation", "reclaim_margin",
+                 "reclaim_pool"):
         if knob in SimConfig._fields and f"`{knob}`" not in api_md:
             out.append(
                 f"SimConfig field {knob!r} is not documented in docs/api.md")
+
+    from repro.estimators import list_estimators
+    est_table = _estimator_table_names(api_md)
+    for name in list_estimators():
+        if name not in est_table:
+            out.append(
+                f"estimator {name!r} is registered but missing from the "
+                f"'Estimators' table in docs/api.md")
+    for name in est_table:
+        if name not in list_estimators():
+            out.append(
+                f"docs/api.md Estimators table lists {name!r}, which is "
+                f"not registered")
 
     table = _registry_table_rows(api_md)
     for name in list_policies():

@@ -54,6 +54,13 @@ from repro.api.policies import (  # noqa: F401
     LeastFitPolicy,
     OversubPolicy,
     PriorityFlexPolicy,
+    ReclaimPolicy,
     resolve_estimator,
+)
+from repro.estimators import (  # noqa: F401
+    EstimatorState,
+    get_estimator,
+    list_estimators,
+    register_estimator,
 )
 from repro.api.experiment import Experiment  # noqa: F401

@@ -41,15 +41,18 @@ class Experiment:
 
     def __init__(self, trace: TaskSet, cluster: Optional[SimConfig] = None,
                  policy="flex-f", params: Optional[FlexParams] = None,
-                 estimator="current", est_noise_std: float = 0.0,
+                 estimator=None, est_noise_std: float = 0.0,
                  controller=None):
         self.trace = trace
         self.cluster = cluster if cluster is not None else SimConfig()
         # Same normalization as the legacy simulate() entry point (one
-        # implementation — the two front-ends cannot drift).
+        # implementation — the two front-ends cannot drift).  ``estimator``
+        # may be a repro.estimators registry name or an estimator object;
+        # None defers to SimConfig.estimator, then "current".
         (self.policy, self.params, self.estimator,
          self.controller) = simulator._resolve(
-            policy, params, estimator, "current", est_noise_std, controller)
+            policy, params, estimator, "current", est_noise_std, controller,
+            self.cluster)
         self._table = None
 
     # -- internals ---------------------------------------------------------

@@ -206,8 +206,52 @@ class PriorityFlexPolicy(FlexFifoPolicy):
         return jnp.argsort(-key)
 
 
+@register_policy("reclaim")
+@dataclasses.dataclass(frozen=True)
+class ReclaimPolicy(FlexFifoPolicy):
+    """Headroom reclamation: second-chance admission against PREDICTED usage.
+
+    The simulator's reclamation pass (``SimConfig(reclamation=True)``)
+    re-admits tasks the primary policy dropped, judging each node by its
+    predicted usage instead of its allocation: feasible iff
+    ``P * L-hat + reserved + r <= 1 - margin_scale * P``.  The safety
+    margin is DERIVED FROM THE LIVE PENALTY CONTROLLER — when QoS
+    violations push the penalty P up, the reclaimable cap shrinks on both
+    sides of the inequality and reclamation backs off automatically;
+    when the estimator earns trust (P at ``p_min``), the pass may fill
+    nodes up to ``1 - margin_scale`` of capacity.  Scoring is inherited
+    from FlexF (least-loaded + same-source spreading), and the traced cap
+    rides the kernel template's ``cap`` scalar, so reclamation reuses
+    ``admit_queue_wavefront`` unchanged — no second admission code path.
+    """
+
+    name = "reclaim"
+    margin_scale: float = 0.1
+
+    def _cap(self, ctx: PolicyContext) -> jnp.ndarray:
+        return jnp.maximum(1.0 - self.margin_scale * ctx.penalty, 0.0)
+
+    def feasible(self, ctx: PolicyContext, task: TaskView) -> jnp.ndarray:
+        return admission.fits(self._load(ctx), task.request, self._cap(ctx))
+
+    def kernel_inputs(self, ctx: PolicyContext,
+                      task: TaskView) -> admission.KernelInputs:
+        # Same template as FlexF with the penalty-derived cap; the cap is
+        # admission-invariant within a pass (penalty updates once per
+        # slot), so the wavefront soundness invariants hold.
+        return super().kernel_inputs(ctx, task)._replace(
+            cap=self._cap(ctx).astype(jnp.float32))
+
+
 # ---------------------------------------------------------------------------
 # Estimators (protocol wrappers over repro.core.estimator)
+#
+# These stateless classes predate the repro.estimators subsystem and are
+# kept for backward compatibility: any object with the legacy
+# ``refresh(prev_est, node_usage, key)`` hook still works everywhere an
+# estimator is accepted (adapted bit-identically by
+# ``repro.estimators.base.as_stateful``).  New code should register
+# stateful estimators with ``repro.estimators.register_estimator``.
 # ---------------------------------------------------------------------------
 
 @dataclasses.dataclass(frozen=True)
@@ -243,26 +287,16 @@ ESTIMATORS = {
 
 
 def resolve_estimator(est, noise_std: float = 0.0):
-    """str | Estimator -> Estimator (str honours the noise knob)."""
-    if isinstance(est, str):
-        if est == "current":
-            return CurrentUsageEstimator(noise_std=noise_std)
-        if noise_std:
-            raise ValueError(
-                f"est_noise_std is only supported by the 'current' "
-                f"estimator, not {est!r}; construct the estimator object "
-                f"yourself to combine noise with it")
-        try:
-            return ESTIMATORS[est]()
-        except KeyError:
-            raise KeyError(
-                f"unknown estimator {est!r}; "
-                f"registered: {sorted(ESTIMATORS)}") from None
-    if noise_std:
-        raise ValueError(
-            "est_noise_std is ignored when an Estimator object is passed; "
-            "set the noise on the object instead")
-    return est
+    """str | Estimator -> stateful Estimator (str honours the noise knob).
+
+    Delegates to the ``repro.estimators`` registry — names resolve to the
+    stateful built-ins there (``current``/``ewma`` are bit-identical to
+    the legacy classes above), and estimator objects of either
+    convention are adapted to the stateful ``init_state``/``refresh``
+    contract.
+    """
+    from repro.estimators.registry import resolve_estimator as _resolve
+    return _resolve(est, noise_std)
 
 
 # ---------------------------------------------------------------------------

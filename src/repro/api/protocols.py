@@ -94,11 +94,30 @@ def policy_default_params(policy) -> FlexParams:
 
 @runtime_checkable
 class Estimator(Protocol):
-    """Produces the per-node load estimate L-hat the ULB filter consumes."""
+    """Produces the per-node load estimate L-hat the ULB filter consumes.
 
-    def refresh(self, prev_est: jnp.ndarray, node_usage: jnp.ndarray,
-                key: jax.Array) -> jnp.ndarray:
-        """New (N, R) estimate from the previous one + fresh measurements."""
+    Estimators are STATEFUL: ``init_state`` builds a pytree
+    (:class:`repro.estimators.EstimatorState`) that the simulator carries
+    through its scan — ``state.est`` is the (N, R) estimate admission
+    reads, ``state.aux`` holds estimator-specific arrays (ring buffers,
+    slot counters, model parameters) with static shapes.  The estimator
+    OBJECT stays a hashable static-jit argument; all arrays live in the
+    state.
+
+    Legacy stateless estimators — a bare
+    ``refresh(prev_est, node_usage, key) -> est`` hook — are still
+    accepted everywhere and adapted bit-identically
+    (``repro.estimators.as_stateful``).  Register implementations by
+    name with ``repro.estimators.register_estimator``; built-ins:
+    ``current``, ``ewma``, ``quantile``, ``learned``.
+    """
+
+    def init_state(self, n_nodes: int, n_resources: int = 2):
+        """Initial EstimatorState for an n_nodes-node cluster."""
+        ...
+
+    def refresh(self, state, node_usage: jnp.ndarray, key: jax.Array):
+        """New EstimatorState from fresh (N, R) usage measurements."""
         ...
 
 

@@ -1,10 +1,13 @@
-"""Load estimators L-hat (paper §4.2, §5.1).
+"""Load-estimator math primitives L-hat (paper §4.2, §5.1).
 
 The paper deliberately uses a *simple* estimator — "we monitor and use the
 current resource usage" — and shows Flex's penalty controller compensates
-for its errors.  We provide that estimator plus an EWMA variant (the related
-work's standard choice, e.g. Xiao et al. [32]) and an optional measurement
-noise knob so tests can stress the controller with a *bad* estimator.
+for its errors.  This module keeps the two primitive update rules
+(current-usage with an optional noise knob, EWMA); the pluggable
+estimator SUBSYSTEM — the stateful protocol, the string registry, the
+predictive ``quantile``/``learned`` estimators and headroom reclamation —
+lives in :mod:`repro.estimators`, whose built-ins call back into these
+functions so the historical knobs stay bit-identical.
 """
 from __future__ import annotations
 

@@ -19,6 +19,17 @@ Per-slot pipeline (semantics match Kubernetes + Alg. 3):
   5. refresh the load estimator, clear reservations
   6. order the queue via the policy's queue_order hook (FIFO when absent)
      and admit retries + this slot's arrivals sequentially
+  7. with ``SimConfig(reclamation=True)``: merge permanently-dropped tasks
+     into a bounded pool and re-admit it against PREDICTED headroom
+     (allocation minus predicted usage minus a penalty-derived safety
+     margin) via the ``reclaim`` policy — through the same
+     ``admit_queue_wavefront`` path as primary admission
+
+Estimators are the stateful ``init_state``/``refresh`` pair of
+``repro.estimators`` (windowed estimators carry static ring buffers
+through the scan); legacy stateless estimators are adapted
+bit-identically.  ``SimConfig(estimator="quantile")`` selects one by
+registry name.
 
 Execution substrate of step 6 (the hot path): with
 ``SimConfig(use_kernel=True)`` every ScheduleOne decision in the inner
@@ -129,6 +140,7 @@ def simulate_core(
     init = dict(
         node=NodeState.zeros(n_nodes),
         ctrl=ctrl_impl.init(params),
+        est=est.init_state(n_nodes),
         placement=jnp.full((T,), -1, jnp.int32),
         admit_slot=jnp.full((T,), -1, jnp.int32),
         attempts=jnp.zeros((T,), jnp.int32),
@@ -138,6 +150,12 @@ def simulate_core(
         retry=jnp.full((Qr,), -1, jnp.int32),
         n_rejected=jnp.zeros((), jnp.int32),
     )
+    if cfg.reclamation:
+        from repro.api.policies import ReclaimPolicy
+
+        reclaim_policy = ReclaimPolicy(margin_scale=cfg.reclaim_margin)
+        init["pool"] = jnp.full((cfg.reclaim_pool,), -1, jnp.int32)
+        init["n_reclaimed"] = jnp.zeros((), jnp.int32)
 
     demand_scale = jnp.asarray(cfg.demand_scale, jnp.float32)
 
@@ -173,8 +191,9 @@ def simulate_core(
 
         # --- 5. estimator refresh ------------------------------------------
         k_est = jax.random.fold_in(k_slot, 1)
+        est_state = est.refresh(carry["est"], node_usage, k_est)
         node = NodeState(
-            est_usage=est.refresh(carry["node"].est_usage, node_usage, k_est),
+            est_usage=est_state.est,
             reserved=jnp.zeros_like(node_usage),
             requested=requested,
             n_tasks=n_tasks,
@@ -218,9 +237,50 @@ def simulate_core(
         new_retry = jnp.where(pos < n_eligible, sorted_ids[:Qr], -1)
         n_dropped = (jnp.sum((failed & ~eligible).astype(jnp.int32))
                      + jnp.maximum(n_eligible - Qr, 0))
-        n_rejected = carry["n_rejected"] + n_dropped
+
+        # --- 7. headroom reclamation (opt-in) ------------------------------
+        if cfg.reclamation:
+            # Permanently-dropped tasks (out of retries, or retry-queue
+            # overflow) enter a bounded pool instead of being rejected;
+            # only POOL overflow counts into n_rejected.
+            rank = jnp.argsort(retry_order)         # queue pos -> sorted pos
+            pooled = (failed & ~eligible) | (eligible & (rank >= Qr))
+            merged = jnp.concatenate(
+                [carry["pool"], jnp.where(pooled, queue_ids, -1)])
+            merged = merged[jnp.argsort(merged < 0, stable=True)]
+            pool = merged[:cfg.reclaim_pool]
+            n_rejected = carry["n_rejected"] + (
+                jnp.sum((merged >= 0).astype(jnp.int32))
+                - jnp.sum((pool >= 0).astype(jnp.int32)))
+
+            # Re-admit the pool against predicted headroom: the reclaim
+            # policy judges nodes by P * L-hat + reserved against the
+            # penalty-derived cap, and the decisions run through the SAME
+            # admit_queue_wavefront path as primary admission (the
+            # reclaim policy's kernel_inputs hook + batch_mode).
+            pvalid = pool >= 0
+            pqi = jnp.maximum(pool, 0)
+            node, r_idx = admission.admit_queue(
+                reclaim_policy, node, ts.request[pqi], ts.src[pqi],
+                ts.priority[pqi], pvalid, ctrl.penalty, params,
+                use_kernel=cfg.use_kernel, interpret=cfg.kernel_interpret,
+                batch_mode=True, topk=cfg.wavefront_topk,
+                dedup_buckets=cfg.dedup_buckets,
+                tie_margin=cfg.wavefront_tie_margin)
+            r_ok = pvalid & (r_idx >= 0)
+            placement = placement.at[pqi].max(jnp.where(r_ok, r_idx, -1))
+            admit_slot = admit_slot.at[pqi].max(jnp.where(r_ok, slot, -1))
+            n_reclaimed = (carry["n_reclaimed"]
+                           + jnp.sum(r_ok.astype(jnp.int32)))
+            pool = jnp.where(r_ok, -1, pool)
+            pool = pool[jnp.argsort(pool < 0, stable=True)]
+        else:
+            n_rejected = carry["n_rejected"] + n_dropped
+            n_reclaimed = jnp.zeros((), jnp.int32)
 
         # --- metrics --------------------------------------------------------
+        gate = cfg.record_node_usage
+        empty = jnp.zeros((0, NUM_RESOURCES), jnp.float32)
         metrics = SlotMetrics(
             usage=jnp.sum(node_usage, axis=0) / n_nodes,
             requested=jnp.sum(node.requested + node.reserved, axis=0) / n_nodes,
@@ -230,15 +290,22 @@ def simulate_core(
             usage_mean=jnp.mean(node_usage, axis=0),
             n_running=jnp.sum(active.astype(jnp.int32)),
             n_rejected=n_rejected,
-            node_usage=(node_usage if cfg.record_node_usage
-                        else jnp.zeros((0, NUM_RESOURCES), jnp.float32)),
+            node_usage=node_usage if gate else empty,
+            est_usage=jnp.sum(est_state.est, axis=0) / n_nodes,
+            node_est=est_state.est if gate else empty,
+            node_requested=requested if gate else empty,
+            n_reclaimed=n_reclaimed,
         )
 
         new_carry = dict(
-            node=node, ctrl=ctrl, placement=placement, admit_slot=admit_slot,
-            attempts=attempts, qos_ok=qos_ok, active_cnt=active_cnt,
-            noise=noise, retry=new_retry, n_rejected=n_rejected,
+            node=node, ctrl=ctrl, est=est_state, placement=placement,
+            admit_slot=admit_slot, attempts=attempts, qos_ok=qos_ok,
+            active_cnt=active_cnt, noise=noise, retry=new_retry,
+            n_rejected=n_rejected,
         )
+        if cfg.reclamation:
+            new_carry["pool"] = pool
+            new_carry["n_reclaimed"] = n_reclaimed
         return new_carry, metrics
 
     slots = jnp.arange(n_slots, dtype=jnp.int32)
@@ -254,8 +321,13 @@ def simulate_core(
 
 
 def _resolve(policy, params, estimator, estimator_kind, est_noise_std,
-             controller):
-    """Normalize the open-API knobs into static jit arguments."""
+             controller, cfg: SimConfig | None = None):
+    """Normalize the open-API knobs into static jit arguments.
+
+    Estimator precedence: an explicit ``estimator`` argument (object or
+    registry name) wins, then a non-empty ``SimConfig.estimator``, then
+    the legacy ``estimator_kind`` string.
+    """
     from repro.api.policies import (AimdPenaltyController, resolve_estimator)
     from repro.api.protocols import (policy_default_params,
                                      policy_prepare_params)
@@ -265,8 +337,10 @@ def _resolve(policy, params, estimator, estimator_kind, est_noise_std,
     if params is None:
         params = policy_default_params(policy)
     params = policy_prepare_params(policy, params)
-    est = resolve_estimator(estimator if estimator is not None
-                            else estimator_kind, est_noise_std)
+    if estimator is None:
+        estimator = (cfg.estimator if cfg is not None and cfg.estimator
+                     else estimator_kind)
+    est = resolve_estimator(estimator, est_noise_std)
     ctrl_impl = controller if controller is not None else AimdPenaltyController()
     return policy, params, est, ctrl_impl
 
@@ -278,11 +352,14 @@ def simulate(ts: TaskSet, arrival_table: jnp.ndarray, cfg: SimConfig,
     """Jitted simulation with policy/estimator/controller normalization.
 
     ``policy`` may be a registry name, a ``SchedulerKind`` (legacy shim) or
-    a PlacementPolicy object; likewise ``estimator`` takes an object while
+    a PlacementPolicy object; ``estimator`` takes a ``repro.estimators``
+    registry name or an estimator object (stateful or legacy stateless),
+    ``SimConfig(estimator=...)`` selects one from the config, and
     ``estimator_kind`` keeps the historical string knob working.
     """
     policy, params, est, ctrl_impl = _resolve(
-        policy, params, estimator, estimator_kind, est_noise_std, controller)
+        policy, params, estimator, estimator_kind, est_noise_std, controller,
+        cfg)
     return simulate_core(ts, arrival_table, cfg, policy, params, key,
                          est, ctrl_impl)
 

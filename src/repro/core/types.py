@@ -164,6 +164,21 @@ class SimConfig(NamedTuple):
                                         # conflict checks: larger = more
                                         # conservative (extra rounds/sweeps,
                                         # never wrong decisions)
+    estimator: str = ""            # registry name for the load estimator
+                                   # (repro.estimators); "" keeps the caller's
+                                   # estimator/estimator_kind arguments
+    reclamation: bool = False      # per-slot headroom-reclamation pass:
+                                   # re-admit dropped tasks against predicted
+                                   # usage via the 'reclaim' policy through
+                                   # admit_queue_wavefront (docs/api.md,
+                                   # "Headroom reclamation")
+    reclaim_margin: float = 0.1    # safety-margin scale: the reclaim pass
+                                   # caps nodes at 1 - reclaim_margin * P,
+                                   # so QoS pressure (rising penalty P)
+                                   # automatically backs reclamation off
+    reclaim_pool: int = 256        # static width of the dropped-task pool
+                                   # the reclaim pass draws from; pool
+                                   # overflow counts into n_rejected
 
 
 class SlotMetrics(NamedTuple):
@@ -180,6 +195,15 @@ class SlotMetrics(NamedTuple):
     node_usage: jnp.ndarray   # (S, N, R) per-node usage (machine-level analysis);
                               # (S, 0, R) unless SimConfig.record_node_usage —
                               # the O(S*N*R) array is opt-in
+    est_usage: jnp.ndarray    # (S, R) cluster mean load estimate L-hat (the
+                              # estimate admission used this slot)
+    node_est: jnp.ndarray     # (S, N, R) per-node estimate (estimator-error
+                              # analysis); (S, 0, R) unless record_node_usage
+    node_requested: jnp.ndarray  # (S, N, R) per-node running requests
+                                 # (overprovisioning / zombie-node analysis);
+                                 # (S, 0, R) unless record_node_usage
+    n_reclaimed: jnp.ndarray  # (S,) cumulative tasks admitted by the
+                              # reclamation pass (0 unless SimConfig.reclamation)
 
 
 class SimResult(NamedTuple):

@@ -1,0 +1,47 @@
+"""``repro.estimators`` — pluggable, stateful load estimators.
+
+The usage–allocation gap closes only as well as L-hat predicts usage
+(paper §4.2); this package makes the estimator a first-class subsystem
+mirroring the policy registry:
+
+    from repro.estimators import register_estimator, EstimatorState
+
+    @register_estimator("my-est")
+    class MyEstimator:
+        def init_state(self, n_nodes, n_resources=2): ...
+        def refresh(self, state, node_usage, key): ...
+
+    SimConfig(estimator="my-est")           # or Experiment(estimator=...)
+
+Built-ins: ``current`` (the paper's), ``ewma``, ``quantile`` (sliding
+peak-window quantile), ``learned`` (trained MLP predictor).  Legacy
+stateless estimators (``refresh(prev_est, node_usage, key)``) keep
+working everywhere — ``as_stateful`` adapts them bit-identically.
+"""
+from repro.estimators.base import (  # noqa: F401
+    EstimatorState,
+    StatelessAdapter,
+    as_stateful,
+    is_stateful,
+    zeros_state,
+)
+from repro.estimators.builtin import (  # noqa: F401
+    CurrentEstimator,
+    EwmaEstimator,
+    QuantileWindowEstimator,
+    ring_chronological,
+    ring_push,
+)
+from repro.estimators.learned import (  # noqa: F401
+    LearnedUsageEstimator,
+    make_dataset,
+    mlp_apply,
+    mlp_init,
+    train_usage_predictor,
+)
+from repro.estimators.registry import (  # noqa: F401
+    get_estimator,
+    list_estimators,
+    register_estimator,
+    resolve_estimator,
+)

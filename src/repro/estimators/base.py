@@ -1,0 +1,90 @@
+"""The stateful estimator contract (paper §4.2 generalized).
+
+The paper's estimator is memoryless — "we monitor and use the current
+resource usage" — but closing the usage–allocation gap *predictively*
+needs history: EWMA smoothing, sliding peak-window quantiles, learned
+extrapolation.  This module defines the pytree state those estimators
+carry through the simulator scan:
+
+``EstimatorState(est, aux)``
+  * ``est``  — the (N, R) load estimate L-hat the ULB filter consumes;
+  * ``aux``  — any estimator-specific pytree (ring buffers, slot
+    counters, model parameters).  Shapes must be static: windowed
+    estimators allocate a fixed ``(window, N, R)`` ring buffer once in
+    ``init_state`` and overwrite slots in ``refresh``.
+
+An estimator object itself stays a **hashable, immutable** static-jit
+argument (frozen dataclass); everything array-valued lives in the state.
+
+Two call conventions coexist:
+
+  * stateful (this module): ``init_state(n_nodes, n_resources) ->
+    EstimatorState`` and ``refresh(state, node_usage, key) ->
+    EstimatorState``;
+  * legacy stateless (the seed repo / ``repro.api.policies``):
+    ``refresh(prev_est, node_usage, key) -> est``.  ``as_stateful``
+    wraps such objects into the stateful contract with ``state.est`` as
+    the only carried leaf — bit-identical to the pre-subsystem behavior,
+    so user estimators written against the old protocol keep working.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import NUM_RESOURCES
+
+
+class EstimatorState(NamedTuple):
+    """Pytree carried through the simulator scan for one estimator."""
+
+    est: jnp.ndarray   # (N, R) f32 — current load estimate L-hat
+    aux: Any = ()      # estimator-specific pytree (ring buffer, params, ...)
+
+
+def zeros_state(n_nodes: int, n_resources: int = NUM_RESOURCES,
+                aux: Any = ()) -> EstimatorState:
+    return EstimatorState(
+        est=jnp.zeros((n_nodes, n_resources), jnp.float32), aux=aux)
+
+
+def is_stateful(est) -> bool:
+    """True when ``est`` implements the stateful init_state/refresh pair."""
+    return getattr(est, "init_state", None) is not None
+
+
+@dataclasses.dataclass(frozen=True)
+class StatelessAdapter:
+    """Wrap a legacy ``refresh(prev_est, node_usage, key) -> est`` object.
+
+    The adapter's state carries only ``est``, seeded with zeros exactly
+    like the pre-subsystem simulator carry, so adapted estimators are
+    bit-identical to their historical behavior.  Hashability (static-jit
+    eligibility) is inherited from the wrapped object.
+    """
+
+    inner: Any
+
+    def init_state(self, n_nodes: int,
+                   n_resources: int = NUM_RESOURCES) -> EstimatorState:
+        return zeros_state(n_nodes, n_resources)
+
+    def refresh(self, state: EstimatorState, node_usage: jnp.ndarray,
+                key: jax.Array) -> EstimatorState:
+        return EstimatorState(
+            est=self.inner.refresh(state.est, node_usage, key), aux=())
+
+
+def as_stateful(est):
+    """Estimator (either convention) -> stateful estimator."""
+    if is_stateful(est):
+        return est
+    if getattr(est, "refresh", None) is None:
+        raise TypeError(
+            f"{est!r} is not an estimator: it implements neither the "
+            f"stateful init_state/refresh pair nor the legacy "
+            f"refresh(prev_est, node_usage, key) hook")
+    return StatelessAdapter(est)

@@ -1,0 +1,253 @@
+"""Learned usage predictor: a tiny MLP over the sliding usage window.
+
+The related work's prediction-driven provisioning (Lu & Chen) fits a
+demand model offline and provisions against its forecasts.  Here the
+model is a per-(node, resource) scalar MLP that maps the last ``window``
+usage samples to the next one, trained on synthetic AR(1) demand series
+drawn from :mod:`repro.traces.generator` task statistics (vmapped across
+tasks — one ``lax.scan`` per task series, batched into one program).
+
+Three deliberate design points:
+
+* **residual, zero-initialized head** — the MLP predicts a CORRECTION to
+  the last sample (``pred = last + mlp(window)``) and its output layer
+  initializes to zero, so an untrained ``learned`` estimator is exactly
+  the paper's ``current`` estimator.  Training can only improve on that
+  baseline; a missing checkpoint degrades gracefully instead of wrecking
+  admission.
+* **hashable estimator object** — estimator objects are static ``jax.jit``
+  arguments, so parameters are frozen into nested float tuples on the
+  dataclass and thawed into the :class:`EstimatorState` pytree by
+  ``init_state`` (arrays ride the scan carry, not the jit cache key).
+* **train-stack reuse** — training runs through
+  ``repro.train.train_step.make_train_step`` (AdamW, cosine schedule)
+  and checkpoints through ``repro.train.checkpoint`` — the same code
+  paths the LM trainer uses, exercised end-to-end by the ``slow`` test.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.types import NUM_RESOURCES, TaskSet
+from repro.estimators.base import EstimatorState
+from repro.estimators.builtin import ring_chronological, ring_push
+from repro.estimators.registry import register_estimator
+
+
+# ---------------------------------------------------------------------------
+# Model: per-series scalar MLP, residual head
+# ---------------------------------------------------------------------------
+
+def mlp_init(key: jax.Array, window: int, hidden: int) -> dict:
+    k1, = jax.random.split(key, 1)
+    scale = 1.0 / np.sqrt(window)
+    return {
+        "w1": scale * jax.random.normal(k1, (window, hidden), jnp.float32),
+        "b1": jnp.zeros((hidden,), jnp.float32),
+        # Zero head: untrained prediction == last sample == 'current'.
+        "w2": jnp.zeros((hidden, 1), jnp.float32),
+        "b2": jnp.zeros((1,), jnp.float32),
+    }
+
+
+def mlp_apply(params: dict, x: jnp.ndarray) -> jnp.ndarray:
+    """x: (..., window) usage history, oldest first -> (...) prediction."""
+    h = jnp.tanh(x @ params["w1"] + params["b1"])
+    return x[..., -1] + (h @ params["w2"])[..., 0] + params["b2"][0]
+
+
+class UsagePredictorModel(NamedTuple):
+    """Duck-typed ``Model`` for ``make_train_step`` (only ``loss`` is used)."""
+
+    window: int
+    hidden: int
+
+    def init(self, key: jax.Array) -> dict:
+        return mlp_init(key, self.window, self.hidden)
+
+    def loss(self, params, batch):
+        pred = mlp_apply(params, batch["x"])
+        return jnp.mean(jnp.square(pred - batch["y"])), {}
+
+
+# ---------------------------------------------------------------------------
+# Dataset: AR(1) demand series from trace statistics, vmapped across tasks
+# ---------------------------------------------------------------------------
+
+def make_dataset(ts: TaskSet, n_slots: int, window: int, key: jax.Array,
+                 max_tasks: int = 512) -> dict:
+    """Sliding (window -> next) examples from per-task demand series.
+
+    Each task's series follows the simulator's demand process exactly
+    (AR(1) noise around ``mean_usage``, clipped at ``peak_usage``); one
+    ``lax.scan`` per task, vmapped.  Returns ``{"x": (E, window),
+    "y": (E,)}`` with every (task, resource) series contributing its
+    sliding windows.
+    """
+    n = min(int(ts.num_tasks), max_tasks)
+    mean = ts.mean_usage[:n]
+    std = ts.std_usage[:n]
+    peak = ts.peak_usage[:n]
+    rho = ts.ar_rho[:n]
+
+    def one_task(mean_t, std_t, peak_t, rho_t, key_t):
+        def step(noise, k):
+            w = jax.random.normal(k, ())
+            noise = rho_t * noise + jnp.sqrt(
+                jnp.maximum(1.0 - rho_t ** 2, 0.0)) * w
+            d = jnp.clip(mean_t + std_t * noise, 0.0, peak_t)  # (R,)
+            return noise, d
+
+        _, series = jax.lax.scan(step, jnp.zeros(()),
+                                 jax.random.split(key_t, n_slots))
+        return series                                          # (S, R)
+
+    series = jax.vmap(one_task)(mean, std, peak, rho,
+                                jax.random.split(key, n))      # (T, S, R)
+    idx = (jnp.arange(n_slots - window)[:, None]
+           + jnp.arange(window)[None, :])                      # (E0, W)
+    x = series[:, idx, :]                                      # (T, E0, W, R)
+    y = series[:, window:, :]                                  # (T, E0, R)
+    x = jnp.moveaxis(x, 3, 2).reshape(-1, window)
+    y = jnp.moveaxis(y, 2, 1).reshape(-1)
+    return {"x": x, "y": y}
+
+
+def train_usage_predictor(ts: TaskSet, *, window: int = 12, hidden: int = 8,
+                          n_slots: int = 64, steps: int = 200,
+                          batch_size: int = 1024, lr: float = 3e-3,
+                          seed: int = 0,
+                          ckpt_dir: Optional[str] = None
+                          ) -> Tuple[dict, list]:
+    """Fit the predictor on trace-derived series; optionally checkpoint.
+
+    Returns ``(params, losses)``.  With ``ckpt_dir`` the final params are
+    saved through ``repro.train.checkpoint`` with the architecture in
+    ``extra`` so ``LearnedUsageEstimator.from_checkpoint`` can rebuild
+    the estimator without out-of-band knowledge.
+    """
+    from repro.train.checkpoint import save
+    from repro.train.optimizer import AdamWConfig, adamw_init
+    from repro.train.train_step import make_train_step
+
+    key = jax.random.PRNGKey(seed)
+    k_data, k_init, k_batch = jax.random.split(key, 3)
+    data = make_dataset(ts, n_slots, window, k_data)
+    n_examples = data["y"].shape[0]
+
+    model = UsagePredictorModel(window=window, hidden=hidden)
+    params = model.init(k_init)
+    opt_cfg = AdamWConfig(lr=lr, warmup_steps=max(steps // 20, 1),
+                          total_steps=steps, weight_decay=0.0)
+    opt_state = adamw_init(params)
+    train_step = jax.jit(make_train_step(model, opt_cfg))
+
+    losses = []
+    for step in range(steps):
+        take = jax.random.randint(jax.random.fold_in(k_batch, step),
+                                  (batch_size,), 0, n_examples)
+        batch = {"x": data["x"][take], "y": data["y"][take]}
+        params, opt_state, metrics = train_step(params, opt_state, batch)
+        losses.append(float(metrics["loss"]))
+
+    if ckpt_dir is not None:
+        save(ckpt_dir, steps, params,
+             extra={"window": window, "hidden": hidden,
+                    "final_loss": losses[-1]})
+    return params, losses
+
+
+# ---------------------------------------------------------------------------
+# The estimator
+# ---------------------------------------------------------------------------
+
+def _freeze(tree) -> tuple:
+    """Pytree of arrays -> hashable nested tuples (sorted dict keys)."""
+    def leaf(a):
+        a = np.asarray(a)
+        return (a.shape, tuple(float(v) for v in a.ravel()))
+    return tuple((k, leaf(v)) for k, v in sorted(tree.items()))
+
+
+def _thaw(frozen: tuple) -> dict:
+    return {k: jnp.asarray(vals, jnp.float32).reshape(shape)
+            for k, (shape, vals) in frozen}
+
+
+@dataclasses.dataclass(frozen=True)
+class LearnedUsageEstimator:
+    """MLP next-usage predictor over a static ring-buffer window.
+
+    ``frozen_params`` keeps the object hashable (static-jit safe); the
+    arrays are thawed into ``state.aux`` once at ``init_state``, so the
+    per-slot ``refresh`` carries them through the scan like any other
+    pytree leaf.  Predictions are clipped to [0, 1] — a load estimate is
+    a node-capacity fraction.
+    """
+
+    window: int = 12
+    hidden: int = 8
+    frozen_params: Any = None   # nested tuples from _freeze; None = untrained
+
+    @classmethod
+    def untrained(cls, window: int = 12,
+                  hidden: int = 8) -> "LearnedUsageEstimator":
+        """Zero-head params: behaves exactly like the 'current' estimator."""
+        return cls(window=window, hidden=hidden,
+                   frozen_params=_freeze(
+                       mlp_init(jax.random.PRNGKey(0), window, hidden)))
+
+    @classmethod
+    def from_params(cls, params: dict, window: int,
+                    hidden: int) -> "LearnedUsageEstimator":
+        return cls(window=window, hidden=hidden,
+                   frozen_params=_freeze(params))
+
+    @classmethod
+    def from_checkpoint(cls, ckpt_dir: str,
+                        step: Optional[int] = None) -> "LearnedUsageEstimator":
+        """Rebuild from a ``train_usage_predictor`` checkpoint."""
+        from repro.train.checkpoint import latest_step, restore, restore_extra
+
+        if step is None:
+            step = latest_step(ckpt_dir)
+            if step is None:
+                raise FileNotFoundError(
+                    f"no checkpoint under {ckpt_dir!r}")
+        extra = restore_extra(ckpt_dir, step)
+        window, hidden = int(extra["window"]), int(extra["hidden"])
+        like = mlp_init(jax.random.PRNGKey(0), window, hidden)
+        params, _meta = restore(ckpt_dir, step, like)
+        return cls.from_params(params, window, hidden)
+
+    # -- stateful estimator contract ---------------------------------------
+
+    def init_state(self, n_nodes: int,
+                   n_resources: int = NUM_RESOURCES) -> EstimatorState:
+        frozen = self.frozen_params
+        if frozen is None:
+            frozen = LearnedUsageEstimator.untrained(
+                self.window, self.hidden).frozen_params
+        buffer = jnp.zeros((self.window, n_nodes, n_resources), jnp.float32)
+        return EstimatorState(
+            est=jnp.zeros((n_nodes, n_resources), jnp.float32),
+            aux=(buffer, jnp.zeros((), jnp.int32), _thaw(frozen)))
+
+    def refresh(self, state: EstimatorState, node_usage: jnp.ndarray,
+                key: jax.Array) -> EstimatorState:
+        buffer, t, params = state.aux
+        buffer = ring_push(buffer, t, node_usage)
+        hist = ring_chronological(buffer, t)          # (W, N, R) oldest-first
+        x = jnp.moveaxis(hist, 0, -1)                 # (N, R, W)
+        est = jnp.clip(mlp_apply(params, x), 0.0, 1.0)
+        return EstimatorState(est=est, aux=(buffer, t + 1, params))
+
+
+# The registry default is the untrained (== 'current') estimator; runs
+# with a trained checkpoint pass a LearnedUsageEstimator object instead.
+register_estimator("learned", lambda: LearnedUsageEstimator.untrained())

@@ -1,0 +1,93 @@
+"""String registry for load estimators — mirrors the policy registry.
+
+Configuration surfaces (``SimConfig(estimator=...)``, ``Experiment``,
+``EngineConfig``, benchmark tables) name estimators without importing
+their classes:
+
+    @register_estimator("my-estimator")
+    class MyEstimator: ...
+
+    # or, for parameterized variants:
+    register_estimator("quantile-p99", lambda: QuantileWindowEstimator(q=0.99))
+
+    est = get_estimator("my-estimator")
+
+``resolve_estimator`` additionally accepts an already-constructed
+estimator object — either the stateful ``init_state``/``refresh`` pair or
+the legacy stateless ``refresh(prev_est, node_usage, key)`` hook, which is
+wrapped by :func:`repro.estimators.base.as_stateful` — plus the historical
+``est_noise_std`` knob (honoured by ``"current"`` only, exactly as the
+pre-subsystem shim did).
+
+Duplicate names follow the policy-registry semantics: last registration
+wins (notebook re-runs re-execute decorators), and the docs-drift guard
+(``scripts/check_docs.py``, tier-1) fails when a registered estimator is
+missing from the ``docs/api.md`` estimator table.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, List
+
+from repro.estimators.base import as_stateful
+
+_ESTIMATORS: Dict[str, Callable[[], object]] = {}
+
+
+def register_estimator(name: str,
+                       factory: Callable[[], object] | None = None):
+    """Register an estimator factory under ``name`` (decorator or call)."""
+    def _add(f):
+        _ESTIMATORS[name] = f
+        return f
+
+    if factory is None:
+        return _add
+    return _add(factory)
+
+
+def _ensure_builtins():
+    # Importing the builtin module populates the registry; lazy to keep
+    # this module import-light and cycle-free.
+    import repro.estimators.builtin  # noqa: F401
+    import repro.estimators.learned  # noqa: F401
+
+
+def get_estimator(name: str):
+    """Instantiate the estimator registered under ``name``."""
+    _ensure_builtins()
+    try:
+        return _ESTIMATORS[name]()
+    except KeyError:
+        raise KeyError(
+            f"unknown estimator {name!r}; registered: {sorted(_ESTIMATORS)}"
+        ) from None
+
+
+def list_estimators() -> List[str]:
+    _ensure_builtins()
+    return sorted(_ESTIMATORS)
+
+
+def resolve_estimator(est, noise_std: float = 0.0):
+    """str | estimator object -> stateful estimator.
+
+    Strings resolve through the registry; ``noise_std`` keeps the
+    historical ``est_noise_std`` knob working for ``"current"`` and is
+    rejected (not silently dropped) everywhere else.  Objects may follow
+    either estimator convention; legacy stateless ones are adapted.
+    """
+    if isinstance(est, str):
+        if est == "current":
+            from repro.estimators.builtin import CurrentEstimator
+            return CurrentEstimator(noise_std=noise_std)
+        if noise_std:
+            raise ValueError(
+                f"est_noise_std is only supported by the 'current' "
+                f"estimator, not {est!r}; construct the estimator object "
+                f"yourself to combine noise with it")
+        return as_stateful(get_estimator(est))
+    if noise_std:
+        raise ValueError(
+            "est_noise_std is ignored when an Estimator object is passed; "
+            "set the noise on the object instead")
+    return as_stateful(est)

@@ -37,11 +37,14 @@ import enum
 from collections import deque
 from typing import Callable, Deque, Dict, List, Optional
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.api import admission
 from repro.core.types import ControllerState, FlexParams
 from repro.core.penalty import update_penalty
+from repro.estimators import resolve_estimator
 
 
 class AdmissionPolicy(enum.Enum):
@@ -74,6 +77,9 @@ class EngineConfig:
     n_replicas: int = 4
     kv_budget_tokens: int = 8192       # per-replica KV capacity
     policy: "AdmissionPolicy | str" = AdmissionPolicy.FLEX
+    estimator: "str | object" = "current"  # repro.estimators registry name
+                                           # (or estimator object) feeding the
+                                           # FLEX load estimate L-hat
     max_active_per_replica: int = 64
     straggler_weight: float = 0.5      # score penalty per unit slowdown
     drain_slowdown: float = 3.0        # drain replicas this much slower
@@ -113,6 +119,14 @@ class ServeEngine:
         self.stats = EngineStats()
         self._ever_violated: set = set()
         self._rng = np.random.default_rng(seed)
+        # Load estimator (same registry as the simulator): refreshed once
+        # per round from measured KV footprints; ``_usage_snap`` holds its
+        # estimate — for the default "current" estimator that is exactly
+        # the measured usage (token counts are integers, so the float32
+        # round-trip through the estimator state is lossless).
+        self.estimator = resolve_estimator(cfg.estimator)
+        self._est_state = self.estimator.init_state(cfg.n_replicas, 1)
+        self._est_key = jax.random.PRNGKey(seed)
         self._usage_snap = np.zeros(cfg.n_replicas)
         self._declared_snap = np.zeros(cfg.n_replicas)
         # driver hooks (real-model serving wires prefill/KV surgery here)
@@ -207,10 +221,18 @@ class ServeEngine:
     def submit(self, req: Request):
         self.queue.append(req)
 
+    def _refresh_estimate(self) -> np.ndarray:
+        """Advance the estimator on measured usage; return its L-hat."""
+        measured = self._usage()
+        key = jax.random.fold_in(self._est_key, self.stats.steps)
+        self._est_state = self.estimator.refresh(
+            self._est_state, jnp.asarray(measured[:, None], jnp.float32), key)
+        return np.asarray(self._est_state.est[:, 0], float)
+
     def step(self):
         cfg = self.cfg
         self.reserved[:] = 0.0
-        self._usage_snap = self._usage()
+        self._usage_snap = self._refresh_estimate()
         self._declared_snap = self._declared()
         # admit as many queued requests as fit this round (ScheduleOne loop)
         blocked = deque()

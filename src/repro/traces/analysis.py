@@ -5,6 +5,7 @@ outputs; all heavy lifting stays in jnp.
 """
 from __future__ import annotations
 
+import warnings
 from typing import Dict
 
 import jax.numpy as jnp
@@ -13,6 +14,10 @@ import numpy as np
 from repro.core.types import SimResult, TaskSet
 
 _CLASS_NAMES = {0: "batch", 1: "production", 2: "system"}
+
+_NEEDS_NODE_SERIES = (
+    "needs the per-node series (SlotMetrics.{field} is empty); run the "
+    "simulation with SimConfig(record_node_usage=True)")
 
 
 def cdf(x: jnp.ndarray, qs=(0.1, 0.25, 0.5, 0.75, 0.9, 0.99)) -> Dict[str, float]:
@@ -36,8 +41,7 @@ def machine_level(result: SimResult) -> Dict[str, float]:
     u = result.metrics.node_usage  # (S, N, R)
     if u.size == 0:
         raise ValueError(
-            "machine_level needs per-node usage; run the simulation with "
-            "SimConfig(record_node_usage=True)")
+            "machine_level " + _NEEDS_NODE_SERIES.format(field="node_usage"))
     out = {}
     for r, name in ((0, "cpu"), (1, "mem")):
         ratios = u[..., r]
@@ -78,8 +82,80 @@ def load_balance(result: SimResult) -> Dict[str, float]:
     }
 
 
+def estimator_error(result: SimResult) -> Dict[str, float]:
+    """Estimator-error CDFs: one-slot-ahead L-hat vs realized usage.
+
+    The estimate refreshed at slot t is what admission at slot t uses to
+    place tasks that become active at t+1, so the natural alignment is
+    ``est[t]`` against ``usage[t+1]`` (ellipsis indexing keeps vmapped
+    results with leading seed/sweep axes working).
+    """
+    est = result.metrics.node_est        # (..., S, N, R)
+    usage = result.metrics.node_usage
+    if est.size == 0 or usage.size == 0:
+        raise ValueError(
+            "estimator_error " + _NEEDS_NODE_SERIES.format(field="node_est"))
+    err = est[..., :-1, :, :] - usage[..., 1:, :, :]
+    out = {}
+    for r, name in ((0, "cpu"), (1, "mem")):
+        e = err[..., r]
+        out.update({f"est_abs_err_{name}_{k}": v
+                    for k, v in cdf(jnp.abs(e)).items()})
+        out[f"est_bias_{name}"] = float(jnp.mean(e))       # >0: over-estimates
+        out[f"est_under_frac_{name}"] = float(jnp.mean(e < 0.0))
+    return out
+
+
+def overprovisioning(result: SimResult) -> Dict[str, float]:
+    """Usage–allocation gap per (node, slot): requested minus realized usage.
+
+    The paper's Fig. 1-3 story at node granularity — the stranded
+    capacity a reclamation pass can recover.
+    """
+    req = result.metrics.node_requested  # (..., S, N, R)
+    usage = result.metrics.node_usage
+    if req.size == 0 or usage.size == 0:
+        raise ValueError(
+            "overprovisioning "
+            + _NEEDS_NODE_SERIES.format(field="node_requested"))
+    gap = req - usage
+    out = {}
+    for r, name in ((0, "cpu"), (1, "mem")):
+        out.update({f"overprov_{name}_{k}": v
+                    for k, v in cdf(gap[..., r]).items()})
+        out[f"mean_overprov_{name}"] = float(jnp.mean(gap[..., r]))
+    return out
+
+
+def zombie_nodes(result: SimResult, req_floor: float = 0.05,
+                 usage_eps: float = 0.01) -> Dict[str, float]:
+    """Nodes holding allocation while nearly idle (Beloglazov-style waste).
+
+    A (node, slot) sample is a zombie when its committed requests exceed
+    ``req_floor`` of capacity but realized usage sits under ``usage_eps``
+    — capacity a consolidation/reclamation pass should target.
+    """
+    req = result.metrics.node_requested
+    usage = result.metrics.node_usage
+    if req.size == 0 or usage.size == 0:
+        raise ValueError(
+            "zombie_nodes " + _NEEDS_NODE_SERIES.format(field="node_requested"))
+    out = {}
+    for r, name in ((0, "cpu"), (1, "mem")):
+        zombie = (req[..., r] > req_floor) & (usage[..., r] < usage_eps)
+        out[f"zombie_frac_{name}"] = float(jnp.mean(zombie))
+    return out
+
+
 def summarize(ts: TaskSet, result: SimResult, qos_target: float) -> Dict[str, float]:
-    """One-stop summary used by benchmarks (utilization, QoS, admission)."""
+    """One-stop summary used by benchmarks (utilization, QoS, admission).
+
+    Machine-level keys (``machine_level``, ``estimator_error``,
+    ``overprovisioning``, ``zombie_nodes``) are included when the run
+    recorded per-node series and SKIPPED WITH A WARNING otherwise —
+    callers need not know about ``SimConfig(record_node_usage=True)`` to
+    get the cluster-level summary.
+    """
     m = result.metrics
     admitted = result.placement >= 0
     out = {
@@ -90,6 +166,19 @@ def summarize(ts: TaskSet, result: SimResult, qos_target: float) -> Dict[str, fl
         "admitted_frac": float(jnp.mean(admitted)),
         "n_admitted": int(jnp.sum(admitted)),
         "n_rejected": int(m.n_rejected[-1]),
+        "n_reclaimed": int(m.n_reclaimed[-1]),
         "final_penalty": float(m.penalty[-1]),
     }
+    if m.node_usage.size:
+        out.update(machine_level(result))
+        out.update(estimator_error(result))
+        out.update(overprovisioning(result))
+        out.update(zombie_nodes(result))
+    else:
+        warnings.warn(
+            "summarize: skipping machine-level keys (machine_level, "
+            "estimator_error, overprovisioning, zombie_nodes) — per-node "
+            "series were not recorded; pass "
+            "SimConfig(record_node_usage=True) to include them",
+            stacklevel=2)
     return out
