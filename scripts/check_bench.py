@@ -32,6 +32,18 @@ ROOT = Path(__file__).resolve().parent.parent
 THRESHOLD = 0.20  # fractional decisions/sec drop that counts as a regression
 METRIC = "decisions_per_s"
 
+# Trajectories that must exist in the repo root (checked when running on
+# the default glob): the serving trajectory is the regression record for
+# the engine admission hot loop (ISSUE 7) — losing the file would
+# silently drop the guard.
+REQUIRED_FILES = ("BENCH_serving.json",)
+
+# Per-bench metrics every row must carry (beyond 'us_per_call'): without
+# them the regression diff has nothing to compare.
+REQUIRED_METRICS = {
+    "serving": (METRIC,),
+}
+
 
 def schema_problems(path: str, doc) -> list:
     """Return human-readable schema violations for one trajectory doc."""
@@ -87,6 +99,10 @@ def schema_problems(path: str, doc) -> list:
                 out.append(f"{rwhere}: missing numeric 'us_per_call'")
             elif us < 0:
                 out.append(f"{rwhere}: us_per_call must be >= 0")
+            for met in REQUIRED_METRICS.get(doc.get("bench"), ()):
+                if not isinstance(row.get(met), numbers.Real):
+                    out.append(f"{rwhere}: bench {doc.get('bench')!r} "
+                               f"requires numeric metric {met!r}")
     return out
 
 
@@ -116,12 +132,19 @@ def regressions(doc) -> list:
 def main(argv=None) -> int:
     args = list(sys.argv[1:] if argv is None else argv)
     strict = "--strict" in args
-    files = [a for a in args if a != "--strict"] or sorted(
-        glob.glob(str(ROOT / "BENCH_*.json")))
+    explicit = [a for a in args if a != "--strict"]
+    files = explicit or sorted(glob.glob(str(ROOT / "BENCH_*.json")))
     if not files:
         print("check_bench: no BENCH_*.json files found")
         return 0
     bad_schema, flagged = [], []
+    if not explicit:
+        for req in REQUIRED_FILES:
+            if str(ROOT / req) not in files:
+                bad_schema.append(
+                    f"{req}: required trajectory is missing (record it via "
+                    f"`python benchmarks/run.py --json "
+                    f"bench_{req[len('BENCH_'):-len('.json')]}`)")
     for path in files:
         try:
             with open(path) as f:

@@ -22,6 +22,10 @@ Fails (exit 1 / non-empty problem list) when:
   * an estimator registered in ``repro.estimators`` is missing from the
     "Estimators" table in ``docs/api.md`` (or the table lists a name
     that is not registered);
+  * ``docs/api.md`` lost its "Serving" section, or an ``EngineConfig``
+    knob (serving engine) is undocumented there, or ``docs/kernels.md``
+    stops mentioning the wavefront path's two front-ends (simulator
+    scan + serving engine);
   * a cross-linked docs file (``docs/kernels.md``) has gone missing.
 
 Run standalone (``python scripts/check_docs.py``) or through the tier-1
@@ -121,6 +125,26 @@ def problems() -> list:
         if knob in SimConfig._fields and f"`{knob}`" not in api_md:
             out.append(
                 f"SimConfig field {knob!r} is not documented in docs/api.md")
+
+    # Serving engine: every EngineConfig knob must be documented in the
+    # "Serving" section of docs/api.md (the knob set grew with the
+    # wavefront front-end; undocumented knobs are exactly how the
+    # batched-admission tuning surface would silently drift).
+    import dataclasses as _dc
+    from repro.serving.engine import EngineConfig
+    if "## Serving" not in api_md:
+        out.append("docs/api.md has no '## Serving' section but "
+                   "repro.serving exposes the engine/stream API")
+    for field in _dc.fields(EngineConfig):
+        if f"`{field.name}`" not in api_md:
+            out.append(
+                f"EngineConfig knob {field.name!r} is not documented in "
+                f"docs/api.md")
+    if ("admit_queue" in dir(admission)
+            and "front-end" not in kernels_md.lower()):
+        out.append(
+            "docs/kernels.md does not mention the wavefront path's two "
+            "front-ends (simulator scan + serving engine)")
 
     from repro.estimators import list_estimators
     est_table = _estimator_table_names(api_md)

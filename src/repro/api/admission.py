@@ -5,18 +5,21 @@ One set of filter/score primitives used by BOTH execution substrates:
   * the discrete-time cluster simulator (`repro.core.simulator`) — jnp
     arrays inside a traced ``lax.scan``;
   * the continuous-batching serving engine (`repro.serving.engine`) —
-    eager numpy on a handful of replicas.
+    the same ``admit_queue`` behind the jitted per-policy entry
+    :func:`make_queue_admitter`, replicas mapped onto ``NodeState`` with
+    slot + KV resources (bit-identical placements:
+    tests/test_serving_parity.py).
 
 Every helper is written against the array *methods / operators* shared by
 ``numpy`` and ``jax.numpy`` (plus an explicit ``where`` dispatch), so the
 two paths cannot drift apart again: an admission rule is expressed once.
 
-Shapes are generic over the trailing resource axis: the simulator passes
-``(N, R)`` loads with an ``(R,)`` request, the engine passes ``(N, 1)``
-KV-token loads with a scalar request.
+Shapes are generic over the trailing resource axis: callers pass
+``(N, R)`` loads with ``(R,)`` requests for any R.
 """
 from __future__ import annotations
 
+import functools
 from typing import NamedTuple
 
 import jax
@@ -225,6 +228,62 @@ def admit_queue(policy, node: NodeState, requests, srcs, priorities,
                          use_kernel=use_kernel, interpret=interpret)
 
     return jax.lax.scan(step, node, (requests, srcs, priorities, valid))
+
+
+def make_queue_admitter(policy, params: FlexParams, *,
+                        batch_mode: bool = False, use_kernel: bool = False,
+                        interpret: bool = False, topk: int = 8,
+                        dedup_buckets: int = 64, tie_margin: float = 1e-5):
+    """Compile one reusable admission entry point for a fixed policy.
+
+    The serving engine (and any other eager caller that admits queues
+    repeatedly against changing state) should not re-trace
+    :func:`admit_queue` per call: the policy object, the wavefront knobs
+    and the static queue width fully determine the XLA program.  This
+    wraps ``admit_queue`` in a ``jax.jit`` whose only traced inputs are
+    the live cluster state — ``(node, requests, srcs, priorities, valid,
+    penalty)`` — so each distinct padded queue width compiles once and
+    every subsequent engine step is a single cached-executable launch.
+
+    ``params`` is bound after the policy's ``prepare_params``
+    normalization (e.g. ULB policies pin theta), exactly as the
+    simulator does before its scan — but TRACED, not closed over, so
+    every admitter for the same (policy, knobs) shares one jit cache:
+    constructing many engines (the parity property suite builds
+    hundreds) compiles each queue width once, not once per engine.
+
+    Returns ``admit(node, requests, srcs, priorities, valid, penalty)
+    -> (NodeState, placements (Q,))``.
+    """
+    from repro.api.protocols import policy_prepare_params
+
+    prepared = policy_prepare_params(policy, params)
+    fn = _shared_queue_admitter(policy, batch_mode, use_kernel, interpret,
+                                topk, dedup_buckets, tie_margin)
+
+    def admit(node, requests, srcs, priorities, valid, penalty):
+        return fn(node, requests, srcs, priorities, valid, penalty, prepared)
+
+    return admit
+
+
+@functools.lru_cache(maxsize=64)
+def _shared_queue_admitter(policy, batch_mode, use_kernel, interpret,
+                           topk, dedup_buckets, tie_margin):
+    """One jitted admit_queue per (policy, static knobs) — see
+    :func:`make_queue_admitter`.  Policies are frozen dataclasses, so
+    they hash; FlexParams rides in as a traced pytree."""
+
+    @jax.jit
+    def admit(node, requests, srcs, priorities, valid, penalty, params):
+        return admit_queue(policy, node, requests, srcs, priorities,
+                           valid, penalty, params,
+                           use_kernel=use_kernel, interpret=interpret,
+                           batch_mode=batch_mode, topk=topk,
+                           dedup_buckets=dedup_buckets,
+                           tie_margin=tie_margin)
+
+    return admit
 
 
 # ---------------------------------------------------------------------------

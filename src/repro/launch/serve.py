@@ -10,6 +10,9 @@ running over actual accelerator memory.
 
   PYTHONPATH=src python -m repro.launch.serve --policy flex --requests 64
   PYTHONPATH=src python -m repro.launch.serve --policy reserve --requests 64
+  # open-loop at production rate (arrival patterns from traces.generator):
+  PYTHONPATH=src python -m repro.launch.serve --stream burst --rate 2 \
+      --steps 200 --mode wavefront
 """
 from __future__ import annotations
 
@@ -23,7 +26,10 @@ import numpy as np
 
 from repro.configs import get_smoke_config
 from repro.models.model import build_model, init_cache
-from repro.serving.engine import EngineConfig, Request, ServeEngine
+from repro.serving.engine import (ADMISSION_MODES, EngineConfig, Request,
+                                  ServeEngine)
+from repro.serving.stream import RequestStream, StreamConfig
+from repro.traces.generator import ARRIVAL_PATTERNS
 
 
 class RealModelBackend:
@@ -117,12 +123,22 @@ def make_workload(n: int, seed: int = 0):
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="stablelm-3b")
-    ap.add_argument("--policy", choices=["flex", "reserve"], default="flex")
+    ap.add_argument("--policy", default="flex",
+                    help="'flex'/'reserve' or any repro.api.registry policy "
+                         "name (flex-priority, best-fit-usage, ...)")
+    ap.add_argument("--mode", choices=ADMISSION_MODES, default="wavefront",
+                    help="admission execution mode (EngineConfig"
+                         ".admission_mode)")
     ap.add_argument("--requests", type=int, default=64)
     ap.add_argument("--replicas", type=int, default=2)
     ap.add_argument("--slots", type=int, default=8)
     ap.add_argument("--steps", type=int, default=120)
     ap.add_argument("--budget", type=int, default=512)
+    ap.add_argument("--stream", choices=ARRIVAL_PATTERNS, default=None,
+                    help="drive open-loop from this arrival pattern instead "
+                         "of a pre-filled queue")
+    ap.add_argument("--rate", type=float, default=2.0,
+                    help="mean arrivals per engine step (with --stream)")
     args = ap.parse_args()
 
     backend = RealModelBackend(args.arch, args.replicas, args.slots,
@@ -130,15 +146,26 @@ def main():
     cfg = EngineConfig(
         n_replicas=args.replicas, kv_budget_tokens=args.budget,
         policy=args.policy,
-        max_active_per_replica=args.slots)
+        max_active_per_replica=args.slots,
+        admission_mode=args.mode)
     eng = ServeEngine(cfg, decode_fn=backend.decode_fn)
     eng.on_admit = backend.on_admit
     eng.on_evict = backend.on_evict
-    for req in make_workload(args.requests):
-        eng.submit(req)
 
     t0 = time.time()
-    stats = eng.run(args.steps)
+    if args.stream:
+        # Open-loop: arrivals pushed at --rate per step; sized for the
+        # smoke model's short sequences.
+        stream = RequestStream(
+            StreamConfig(pattern=args.stream, mean_rate=args.rate,
+                         prompt_mean=12, max_tokens_mean=24),
+            horizon=args.steps)
+        stats = stream.drive(eng, steps=args.steps)
+        args.requests = stream.submitted
+    else:
+        for req in make_workload(args.requests):
+            eng.submit(req)
+        stats = eng.run(args.steps)
     wall = time.time() - t0
     print(f"policy={args.policy} replicas={args.replicas} "
           f"budget={args.budget}tok")

@@ -10,30 +10,74 @@ This is the paper's scenario re-instantiated for LLM inference:
   QoS q_j   -> request finishes without eviction
   penalty P -> Alg. 3 feedback on the cluster QoS signal
 
-Two admission policies (``EngineConfig.policy`` takes the enum or its
-string value):
-  RESERVE (LeastFit-style baseline): admit only if the DECLARED footprints
-    of all co-resident requests fit the replica budget.
-  FLEX: admit if P * (measured usage) + reserved-this-round + r fits —
-    usage-based ULB placement with the estimation-penalty controller.
-Both are expressed through ``repro.api.admission`` — the same filter/score
-core the discrete-time cluster simulator traces — so the serving engine and
-the simulator share one admission semantics.
+Admission runs through the SAME core as the discrete-time simulator
+(``repro.api.admission`` + the policy registry), so the serving path and
+the simulator cannot drift apart.  ``EngineConfig.policy`` accepts the
+legacy enum (``AdmissionPolicy.RESERVE``/``FLEX``), its string values
+(``"reserve"``/``"flex"``), ANY policy name registered in
+``repro.api.registry`` (``"flex-priority"``, ``"best-fit-usage"``, ...),
+or a policy object; unknown names raise ``KeyError`` with the registered
+list.  The enum values resolve to registry policies:
+
+  RESERVE -> ``least-fit``: admit only if the DECLARED footprints of all
+    co-resident requests fit the replica budget (request-based baseline);
+  FLEX -> ``flex-f``: admit if ``P * estimated usage + reserved + r``
+    fits — usage-based ULB placement with the estimation-penalty
+    controller and same-source spreading.
+
+Replicas are mapped onto the simulator's :class:`NodeState` with TWO
+resources, both normalized to capacity 1.0 (the canonical hook mapping
+the wavefront conflict checks assume, docs/kernels.md):
+
+  axis 0 (the "CPU" slot)  -> active-request slots / max_active_per_replica
+  axis 1 (the "MEM" slot)  -> KV tokens / kv_budget_tokens
+
+so the slot cap ``n_active < max_active_per_replica`` is just the
+capacity filter on axis 0, and LRF-style queue orders (``flex-l``,
+``flex-priority``) sort by the KV footprint exactly as they sort by
+memory in the cluster.  Requests carry a ``src`` bucket (client/tenant
+hash) and a ``priority`` class, so same-source spreading and
+priority-aware headroom work unchanged.
+
+Three admission execution modes (``EngineConfig.admission_mode``), all
+decision-identical:
+
+  ``"eager"``      — one ``feasible``/``score`` evaluation per request,
+    eager jnp on the replica table: the pre-batching engine structure,
+    kept as the reference baseline the serving benchmark measures
+    speedups against;
+  ``"sequential"`` — one jitted ``admit_queue`` call per step: the
+    ``lax.scan`` over ``admit_one``, whole pending queue per launch;
+  ``"wavefront"``  — ``admit_queue(batch_mode=True)``: the batched
+    top-K candidate kernel with conflict-resolution rounds (PR 3/4),
+    scoring the whole queue per node-table sweep.  The default.
+
+Straggler mitigation: replicas report a step-time EMA; slow replicas get
+their load ESTIMATE inflated by ``straggler_weight * max(ema/mean - 1,
+0)`` (in capacity units), so they both score worse and admit less — and
+replicas slower than ``drain_slowdown``x the mean are drained outright
+(load pinned above any capacity).  Folding the penalty into the load
+(instead of bolting a per-node term onto the score, as the pre-batching
+engine did) is what lets every admission mode share the kernel template
+bit-for-bit.
 
 When a replica overflows (demands exceed the budget), the most recently
-admitted requests are evicted and re-queued — the QoS violation that the
-controller reacts to.  Straggler mitigation: replicas report a step-time
-EMA; slow replicas are score-penalized so new work routes around them, and
-persistent stragglers can be drained.
+admitted requests are evicted and re-queued — the QoS violation the
+controller reacts to.  Eviction invariants (tests/test_serving_engine.py):
+newest-admission-first victim order, evicted requests re-enter the queue
+FIFO-stable ahead of fresh arrivals, the eviction counter is monotone,
+and no request is ever both ``done`` and resident.
 
-The engine is transport/model agnostic: ``decode_fn`` is any callable that
-advances each replica one decode step (the real-model driver in
-``launch/serve.py`` plugs a jitted model.decode in; unit tests use a stub).
+The engine is transport/model agnostic: ``decode_fn`` is any callable
+that advances each replica one decode step (the real-model driver in
+``launch/serve.py`` plugs a jitted model.decode in; unit tests use a
+stub).  Open-loop arrival driving lives in ``repro.serving.stream``.
 """
 from __future__ import annotations
 
 import dataclasses
 import enum
+import time
 from collections import deque
 from typing import Callable, Deque, Dict, List, Optional
 
@@ -42,14 +86,60 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.api import admission
-from repro.core.types import ControllerState, FlexParams
+from repro.api.protocols import policy_prepare_params, policy_queue_order
+from repro.api.registry import get_policy
 from repro.core.penalty import update_penalty
+from repro.core.types import (
+    CPU,
+    MEM,
+    NUM_SRC_BUCKETS,
+    ControllerState,
+    FlexParams,
+    NodeState,
+)
 from repro.estimators import resolve_estimator
+
+# Engine resource axes on the shared (N, R) NodeState (see module doc).
+SLOT_AXIS = CPU   # active-request slots, normalized by max_active_per_replica
+KV_AXIS = MEM     # KV tokens, normalized by kv_budget_tokens
+
+# Effective load pinned onto drained replicas: far above any capacity or
+# oversubscription factor, so the capacity filter rejects every request.
+_DRAIN_LOAD = 1e6
+
+ADMISSION_MODES = ("eager", "sequential", "wavefront")
 
 
 class AdmissionPolicy(enum.Enum):
-    RESERVE = "reserve"   # request-based (baseline)
-    FLEX = "flex"         # usage-based + penalty feedback (the paper)
+    RESERVE = "reserve"   # request-based (baseline) -> registry "least-fit"
+    FLEX = "flex"         # usage-based + penalty feedback -> "flex-f"
+
+
+_ENUM_TO_REGISTRY = {
+    AdmissionPolicy.RESERVE: "least-fit",
+    AdmissionPolicy.FLEX: "flex-f",
+}
+
+
+def resolve_engine_policy(policy):
+    """enum | str | PlacementPolicy -> PlacementPolicy, via the registry.
+
+    The legacy enum (and its string values ``"reserve"``/``"flex"``)
+    resolve to the registry policies with the same semantics; any other
+    string is looked up in ``repro.api.registry`` directly, so every
+    registered policy is a valid serving policy.  Unknown names raise
+    ``KeyError`` naming the registered policies — they do NOT fall
+    through to some default semantics.
+    """
+    if isinstance(policy, AdmissionPolicy):
+        return get_policy(_ENUM_TO_REGISTRY[policy])
+    if isinstance(policy, str):
+        try:
+            policy = AdmissionPolicy(policy)
+        except ValueError:
+            return get_policy(policy)    # KeyError on unknown names
+        return get_policy(_ENUM_TO_REGISTRY[policy])
+    return policy
 
 
 @dataclasses.dataclass
@@ -58,6 +148,8 @@ class Request:
     prompt_len: int
     max_tokens: int            # declared budget (the "request")
     true_tokens: int           # actual generation length (hidden "demand")
+    src: int = 0               # client/tenant hash bucket (same-source rule)
+    priority: int = 0          # CLASS_* (flex-priority headroom)
     generated: int = 0
     replica: int = -1
     evictions: int = 0
@@ -76,14 +168,27 @@ class Request:
 class EngineConfig:
     n_replicas: int = 4
     kv_budget_tokens: int = 8192       # per-replica KV capacity
-    policy: "AdmissionPolicy | str" = AdmissionPolicy.FLEX
+    policy: "AdmissionPolicy | str | object" = AdmissionPolicy.FLEX
     estimator: "str | object" = "current"  # repro.estimators registry name
                                            # (or estimator object) feeding the
                                            # FLEX load estimate L-hat
     max_active_per_replica: int = 64
-    straggler_weight: float = 0.5      # score penalty per unit slowdown
+    straggler_weight: float = 0.5      # load inflation per unit slowdown
     drain_slowdown: float = 3.0        # drain replicas this much slower
     qos_target: float = 0.99
+    admission_mode: str = "wavefront"  # "eager" | "sequential" | "wavefront"
+    admit_batch: int = 256             # static pad width per admission call;
+                                       # longer queues admit in chunks that
+                                       # carry the reservation state exactly
+    wavefront_topk: int = 8            # cached candidates per task per sweep
+                                       # (admit_queue_wavefront; 0 = legacy
+                                       # one-sweep-per-round loop)
+    dedup_buckets: int = 64            # score-bucket dedup width for the
+                                       # wavefront sweep; 0 disables
+    wavefront_tie_margin: float = 1e-5  # conflict-check conservatism
+    kernel_interpret: bool = False     # run Pallas kernels via the interpreter
+                                       # (CPU parity testing; off = reference
+                                       # einsum on non-TPU backends)
 
 
 @dataclasses.dataclass
@@ -96,6 +201,10 @@ class EngineStats:
     penalty_series: List[float] = dataclasses.field(default_factory=list)
     util_series: List[float] = dataclasses.field(default_factory=list)
     tokens_generated: int = 0
+    decisions: int = 0         # admission decisions evaluated (incl. blocked)
+    admit_latency_s: List[float] = dataclasses.field(default_factory=list)
+                               # wall seconds per admission pass (one per step
+                               # with a non-empty queue)
 
 
 class ServeEngine:
@@ -104,18 +213,22 @@ class ServeEngine:
                  = None,
                  flex_params: Optional[FlexParams] = None,
                  seed: int = 0):
-        if isinstance(cfg.policy, str):   # registry-style string config
-            cfg = dataclasses.replace(cfg, policy=AdmissionPolicy(cfg.policy))
+        if cfg.admission_mode not in ADMISSION_MODES:
+            raise ValueError(
+                f"unknown admission_mode {cfg.admission_mode!r}; "
+                f"one of {ADMISSION_MODES}")
         self.cfg = cfg
+        self.policy = resolve_engine_policy(cfg.policy)
         self.decode_fn = decode_fn or self._stub_decode
-        self.params = flex_params or FlexParams.default(
-            qos_target=cfg.qos_target)
+        base = flex_params or FlexParams.default(
+            qos_target=cfg.qos_target,
+            theta=getattr(self.policy, "default_theta", 1.0))
+        self.params = policy_prepare_params(self.policy, base)
         self.ctrl = ControllerState.init(self.params)
         self.queue: Deque[Request] = deque()
         self.active: Dict[int, List[Request]] = {
             i: [] for i in range(cfg.n_replicas)}
         self.step_time_ema = np.ones(cfg.n_replicas)
-        self.reserved = np.zeros(cfg.n_replicas)   # this-round reservations
         self.stats = EngineStats()
         self._ever_violated: set = set()
         self._rng = np.random.default_rng(seed)
@@ -129,11 +242,21 @@ class ServeEngine:
         self._est_key = jax.random.PRNGKey(seed)
         self._usage_snap = np.zeros(cfg.n_replicas)
         self._declared_snap = np.zeros(cfg.n_replicas)
+        # One compiled admission entry per engine (jit re-specializes per
+        # padded queue width): the engine-side batched front-end onto the
+        # shared admission core.
+        self._admit_fn = admission.make_queue_admitter(
+            self.policy, self.params,
+            batch_mode=cfg.admission_mode == "wavefront",
+            interpret=cfg.kernel_interpret,
+            topk=cfg.wavefront_topk,
+            dedup_buckets=cfg.dedup_buckets,
+            tie_margin=cfg.wavefront_tie_margin)
         # driver hooks (real-model serving wires prefill/KV surgery here)
         self.on_admit: Optional[Callable[[Request], None]] = None
         self.on_evict: Optional[Callable[[Request], None]] = None
 
-    # ---------------- admission (the Flex core) ----------------
+    # ---------------- replica state -> NodeState ----------------
 
     def _usage(self) -> np.ndarray:
         return np.array([sum(r.current_footprint for r in self.active[i])
@@ -143,40 +266,187 @@ class ServeEngine:
         return np.array([sum(r.declared_footprint for r in self.active[i])
                          for i in range(self.cfg.n_replicas)], float)
 
-    def _try_admit(self, req: Request) -> bool:
+    def _straggler_extra(self) -> np.ndarray:
+        """(N,) load inflation, in capacity units, from the step-time EMA."""
         cfg = self.cfg
-        cap = float(cfg.kv_budget_tokens)
-        n_active = np.array([len(self.active[i])
-                             for i in range(cfg.n_replicas)], float)
-        # Load estimates are SNAPSHOTS from the round start (the paper's
-        # stale-measurement semantics): requests admitted this round are
-        # accounted via the reservation term only, never double-counted.
-        # Filter + score run through repro.api.admission — the SAME core the
-        # discrete-time simulator traces; replicas are single-resource nodes
-        # ((N, 1) KV-token loads), so the two engines cannot drift apart.
-        if cfg.policy is AdmissionPolicy.RESERVE:
-            load = admission.committed_load(self._declared_snap,
-                                            self.reserved)
+        rel = self.step_time_ema / max(float(self.step_time_ema.mean()), 1e-9)
+        extra = cfg.straggler_weight * np.maximum(rel - 1.0, 0.0)
+        if cfg.drain_slowdown > 0:
+            extra = np.where(rel >= cfg.drain_slowdown, _DRAIN_LOAD, extra)
+        return extra.astype(np.float32)
+
+    def node_state(self) -> NodeState:
+        """The replica table as the simulator's NodeState (see module doc).
+
+        Built from the ROUND-START snapshots (``_usage_snap`` /
+        ``_declared_snap``): requests admitted this round are accounted
+        via the reservation scatters of ``admit_one``/``_commit_state``
+        only, never double-counted — the paper's stale-measurement
+        semantics, shared with the simulator slot loop.
+        """
+        cfg = self.cfg
+        n = cfg.n_replicas
+        kv_cap = float(cfg.kv_budget_tokens)
+        slot_cap = float(cfg.max_active_per_replica)
+        n_active = np.array([len(self.active[i]) for i in range(n)],
+                            np.float32)
+        s_extra = self._straggler_extra()
+
+        est = np.zeros((n, 2), np.float32)
+        est[:, KV_AXIS] = self._usage_snap / kv_cap + s_extra
+        reserved = np.zeros((n, 2), np.float32)
+        reserved[:, SLOT_AXIS] = n_active / slot_cap
+        requested = np.zeros((n, 2), np.float32)
+        requested[:, KV_AXIS] = self._declared_snap / kv_cap + s_extra
+        src_count = np.zeros((n, NUM_SRC_BUCKETS), np.int32)
+        for i in range(n):
+            for r in self.active[i]:
+                src_count[i, r.src % NUM_SRC_BUCKETS] += 1
+        return NodeState(
+            est_usage=jnp.asarray(est),
+            reserved=jnp.asarray(reserved),
+            requested=jnp.asarray(requested),
+            n_tasks=jnp.asarray(n_active.astype(np.int32)),
+            src_count=jnp.asarray(src_count),
+        )
+
+    def _task_arrays(self, reqs: List[Request]):
+        """(Q, 2) request vectors + (Q,) src/priority for the shared core."""
+        cfg = self.cfg
+        kv_cap = float(cfg.kv_budget_tokens)
+        slot_cap = float(cfg.max_active_per_replica)
+        q = len(reqs)
+        r = np.zeros((q, 2), np.float32)
+        r[:, KV_AXIS] = [req.declared_footprint / kv_cap for req in reqs]
+        r[:, SLOT_AXIS] = 1.0 / slot_cap
+        srcs = np.array([req.src % NUM_SRC_BUCKETS for req in reqs], np.int32)
+        prios = np.array([req.priority for req in reqs], np.int32)
+        return r, srcs, prios
+
+    # ---------------- admission (the Flex core) ----------------
+
+    def refresh_snapshots(self):
+        """Advance the estimator on measured usage; refresh round snapshots."""
+        measured = self._usage()
+        key = jax.random.fold_in(self._est_key, self.stats.steps)
+        self._est_state = self.estimator.refresh(
+            self._est_state, jnp.asarray(measured[:, None], jnp.float32), key)
+        self._usage_snap = np.asarray(self._est_state.est[:, 0], float)
+        self._declared_snap = self._declared()
+
+    def _admit_eager(self, node: NodeState, r: np.ndarray, srcs: np.ndarray,
+                     prios: np.ndarray, order: np.ndarray,
+                     penalty) -> np.ndarray:
+        """Per-request reference loop: one feasible/score/argmax per task.
+
+        The pre-batching engine structure, expressed through the SAME
+        policy hooks and admit-one state updates as the scan — the
+        baseline the serving benchmark compares the batched modes
+        against.
+        """
+        placements = np.full(len(r), -1, np.int32)
+        pen = jnp.asarray(penalty, jnp.float32)
+        for k in order:
+            k = int(k)
+            task = admission.TaskView(
+                request=jnp.asarray(r[k]),
+                src=jnp.asarray(int(srcs[k]), jnp.int32),
+                priority=jnp.asarray(int(prios[k]), jnp.int32))
+            ctx = admission.PolicyContext(node=node, penalty=pen,
+                                          params=self.params)
+            feasible = self.policy.feasible(ctx, task)
+            if not bool(jnp.any(feasible)):
+                continue
+            scores = admission.mask_infeasible(
+                self.policy.score(ctx, task), feasible)
+            i = int(jnp.argmax(scores))
+            placements[k] = i
+            req = jnp.asarray(r[k])
+            node = node._replace(
+                reserved=node.reserved.at[i].add(req),
+                requested=node.requested.at[i].add(req),
+                n_tasks=node.n_tasks.at[i].add(1),
+                src_count=node.src_count.at[i, int(srcs[k])].add(1))
+        return placements
+
+    def _admit_batched(self, node: NodeState, r: np.ndarray, srcs: np.ndarray,
+                       prios: np.ndarray, order: np.ndarray,
+                       penalty) -> np.ndarray:
+        """One jitted admit_queue launch per static-width chunk.
+
+        Chunks carry the updated NodeState (reservations included), so a
+        queue longer than ``admit_batch`` is admitted exactly as one
+        sequential pass would.
+        """
+        q = len(r)
+        w = int(self.cfg.admit_batch)
+        placements = np.full(q, -1, np.int32)
+        pen = jnp.asarray(penalty, jnp.float32)
+        for lo in range(0, q, w):
+            idx = order[lo:lo + w]
+            q_eff = len(idx)
+            # Pad to the next power of two (floor 8, cap admit_batch) so
+            # jit compiles a handful of widths, not one per queue length.
+            pad = min(w, max(8, 1 << (q_eff - 1).bit_length()))
+            sl = np.zeros((pad, 2), np.float32)
+            sl[:q_eff] = r[idx]
+            ss = np.zeros(pad, np.int32)
+            ss[:q_eff] = srcs[idx]
+            pp = np.zeros(pad, np.int32)
+            pp[:q_eff] = prios[idx]
+            valid = np.arange(pad) < q_eff
+            node, pl = self._admit_fn(node, jnp.asarray(sl), jnp.asarray(ss),
+                                      jnp.asarray(pp), jnp.asarray(valid),
+                                      pen)
+            placements[idx] = np.asarray(pl[:q_eff])
+        return placements
+
+    def admit_pending(self) -> int:
+        """Admit as many queued requests as fit this round (one pass).
+
+        Applies the policy's ``queue_order`` hook (LRF/priority queues),
+        admits through the configured execution mode, and applies the
+        placements: admitted requests join their replica's active list in
+        admission order; blocked requests stay queued in FIFO order.
+        Returns the number of requests admitted.
+        """
+        if not self.queue:
+            return 0
+        reqs = list(self.queue)
+        r, srcs, prios = self._task_arrays(reqs)
+        valid = np.ones(len(reqs), bool)
+        order = np.arange(len(reqs))
+        hook = policy_queue_order(self.policy)
+        if hook is not None:
+            order = np.asarray(hook(jnp.asarray(r), jnp.asarray(prios),
+                                    jnp.asarray(valid)))
+        node = self.node_state()
+        penalty = float(self.ctrl.penalty)
+
+        t0 = time.perf_counter()
+        if self.cfg.admission_mode == "eager":
+            placements = self._admit_eager(node, r, srcs, prios, order,
+                                           penalty)
         else:
-            load = admission.usage_load(self._usage_snap, self.reserved,
-                                        float(self.ctrl.penalty))
-        feasible = admission.fits(load[:, None], req.declared_footprint, cap)
-        feasible &= n_active < cfg.max_active_per_replica
-        if not feasible.any():
-            return False
-        score = admission.least_loaded_score(load[:, None], cap) \
-            - cfg.straggler_weight * (
-                self.step_time_ema / max(self.step_time_ema.mean(), 1e-9)
-                - 1.0)
-        score = admission.mask_infeasible(score, feasible)
-        i = int(np.argmax(score))
-        req.replica = i
-        self.active[i].append(req)
-        self.reserved[i] += req.declared_footprint
-        self.stats.admitted += 1
-        if self.on_admit is not None:
-            self.on_admit(req)
-        return True
+            placements = self._admit_batched(node, r, srcs, prios, order,
+                                             penalty)
+        self.stats.admit_latency_s.append(time.perf_counter() - t0)
+        self.stats.decisions += len(reqs)
+
+        admitted = 0
+        for k in order:
+            i = int(placements[k])
+            if i < 0:
+                continue
+            req = reqs[int(k)]
+            req.replica = i
+            self.active[i].append(req)
+            self.stats.admitted += 1
+            admitted += 1
+            if self.on_admit is not None:
+                self.on_admit(req)
+        self.queue = deque(req for req in reqs if req.replica < 0)
+        return admitted
 
     # ---------------- decode + overflow handling ----------------
 
@@ -199,6 +469,7 @@ class ServeEngine:
         # overflow: real usage exceeded the budget -> evict newest first
         usage = sum(r.current_footprint for r in reqs)
         cap = self.cfg.kv_budget_tokens
+        evicted = []
         while usage > cap and reqs:
             victim = reqs.pop()           # LIFO: newest admission pays
             usage -= victim.current_footprint
@@ -210,7 +481,11 @@ class ServeEngine:
             self.stats.evicted_events += 1
             if self.on_evict is not None:
                 self.on_evict(victim)
-            self.queue.appendleft(victim)
+            evicted.append(victim)
+        # Re-queue FIFO-stable: victims were popped newest-first, so
+        # extendleft (which reverses) restores their original admission
+        # order at the head of the queue, ahead of fresh arrivals.
+        self.queue.extendleft(evicted)
         # retire finished
         done = [r for r in reqs if r.done]
         self.active[i] = [r for r in reqs if not r.done]
@@ -221,26 +496,10 @@ class ServeEngine:
     def submit(self, req: Request):
         self.queue.append(req)
 
-    def _refresh_estimate(self) -> np.ndarray:
-        """Advance the estimator on measured usage; return its L-hat."""
-        measured = self._usage()
-        key = jax.random.fold_in(self._est_key, self.stats.steps)
-        self._est_state = self.estimator.refresh(
-            self._est_state, jnp.asarray(measured[:, None], jnp.float32), key)
-        return np.asarray(self._est_state.est[:, 0], float)
-
     def step(self):
         cfg = self.cfg
-        self.reserved[:] = 0.0
-        self._usage_snap = self._refresh_estimate()
-        self._declared_snap = self._declared()
-        # admit as many queued requests as fit this round (ScheduleOne loop)
-        blocked = deque()
-        while self.queue:
-            req = self.queue.popleft()
-            if not self._try_admit(req):
-                blocked.append(req)
-        self.queue = blocked
+        self.refresh_snapshots()
+        self.admit_pending()
 
         for i in range(cfg.n_replicas):
             self._step_replica(i)

@@ -1,5 +1,7 @@
 from repro.traces.generator import (  # noqa: F401
+    ARRIVAL_PATTERNS,
     TraceParams,
+    arrival_counts,
     generate_calibrated,
     generate_taskset,
     n_tasks_for_offered_load,

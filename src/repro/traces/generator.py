@@ -165,6 +165,54 @@ def generate_taskset(seed: int, n_tasks: int, n_slots: int,
     )
 
 
+ARRIVAL_PATTERNS = ("poisson", "diurnal", "burst")
+
+
+def arrival_counts(seed: int, n_slots: int, mean_rate: float,
+                   pattern: str = "poisson", *,
+                   diurnal_amp: float = 0.5,
+                   diurnal_period: int | None = None,
+                   burst_prob: float = 0.05,
+                   burst_mult: float = 10.0) -> np.ndarray:
+    """Per-slot arrival counts for open-loop (production-rate) driving.
+
+    The serving benchmarks evaluate admission the way the dynamic-
+    provisioning literature insists on — open-loop, with arrivals pushed
+    at the system at a configured rate, never drained from a pre-filled
+    queue.  Three processes, all with mean ``mean_rate`` arrivals/slot:
+
+      * ``poisson``  — homogeneous Poisson (index of dispersion 1);
+      * ``diurnal``  — Poisson with a sinusoidal rate, peaking at a
+        quarter period (``1 + diurnal_amp * sin(2*pi*t/period)``, the
+        same modulation shape :func:`generate_taskset` uses for cluster
+        arrivals; ``diurnal_period`` defaults to the horizon);
+      * ``burst``    — doubly-stochastic: each slot is a burst with
+        probability ``burst_prob``, multiplying the base rate by
+        ``burst_mult``; the base rate is renormalized so the mean stays
+        ``mean_rate``, which makes the process overdispersed
+        (var/mean = 1 + mean_rate * p*(1-p)*(m-1)^2 / (1+p*(m-1))^2 > 1).
+
+    Returns an (n_slots,) int64 array of counts.
+    """
+    rng = np.random.default_rng(seed)
+    if pattern == "poisson":
+        rate = np.full(n_slots, mean_rate)
+    elif pattern == "diurnal":
+        period = diurnal_period or n_slots
+        t = np.arange(n_slots)
+        rate = mean_rate * (1.0 + diurnal_amp
+                            * np.sin(2 * np.pi * t / max(period, 1)))
+    elif pattern == "burst":
+        is_burst = rng.random(n_slots) < burst_prob
+        mult = np.where(is_burst, burst_mult, 1.0)
+        base = mean_rate / (1.0 + burst_prob * (burst_mult - 1.0))
+        rate = base * mult
+    else:
+        raise ValueError(
+            f"unknown arrival pattern {pattern!r}; one of {ARRIVAL_PATTERNS}")
+    return rng.poisson(np.maximum(rate, 0.0))
+
+
 def scale_demand(ts: TaskSet, scale: float) -> TaskSet:
     """§5.6 sensitivity: scale demand but NOT the requests."""
     return ts._replace(

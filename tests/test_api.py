@@ -214,13 +214,15 @@ def _parity_case(usage, cap, penalty, declared):
     # serving engine side: replicas as single-resource KV nodes
     eng = ServeEngine(EngineConfig(
         n_replicas=len(usage), kv_budget_tokens=cap,
-        policy=AdmissionPolicy.FLEX, straggler_weight=0.5))
+        policy=AdmissionPolicy.FLEX, straggler_weight=0.5,
+        admission_mode="sequential", admit_batch=8))
     eng._usage_snap = np.asarray(usage, float)
     eng.ctrl = ControllerState(penalty=jnp.asarray(penalty),
                                prev_qos=jnp.asarray(1.0))
     req = Request(rid=0, prompt_len=0, max_tokens=declared,
                   true_tokens=declared)
-    admitted = eng._try_admit(req)
+    eng.submit(req)
+    admitted = eng.admit_pending() == 1
 
     # simulator side: same numbers normalized to unit capacity, both
     # resources equal, no same-source signal (w_src term is zero)

@@ -105,6 +105,47 @@ def test_strict_flag_gates_exit_code(tmp_path):
     assert check_bench.main(["--strict", str(path)]) == 1
 
 
+def test_serving_rows_require_decisions_metric():
+    """BENCH_serving rows without the regression metric are schema
+    errors, not silently-undiffable rows."""
+    doc = {"bench": "serving",
+           "runs": [_run("abc1234", [{"name": "serve_poisson",
+                                      "us_per_call": 9.0}])]}
+    probs = check_bench.schema_problems("f", doc)
+    assert probs and any("decisions_per_s" in p for p in probs), probs
+    doc["runs"][0]["rows"][0]["decisions_per_s"] = 1e4
+    assert check_bench.schema_problems("f", doc) == []
+
+
+def test_serving_trajectory_is_required():
+    assert "BENCH_serving.json" in check_bench.REQUIRED_FILES
+    assert (ROOT / "BENCH_serving.json").exists(), (
+        "BENCH_serving.json missing: record it via "
+        "`python benchmarks/run.py --json bench_serving`")
+
+
+def test_serving_trajectory_contents():
+    """The recorded serving trajectory carries the ISSUE 7 acceptance
+    numbers: batched-vs-eager speedup >= 3x at queue depth >= 256, and
+    per-arrival-pattern steady-state rows with latency percentiles and
+    eviction rate."""
+    with open(ROOT / "BENCH_serving.json") as f:
+        doc = json.load(f)
+    assert check_bench.schema_problems("BENCH_serving.json", doc) == []
+    rows = {r["name"]: r for r in doc["runs"][-1]["rows"]}
+    for mode in ("sequential", "wavefront"):
+        row = rows[f"serve_depth256_{mode}"]
+        assert row["min_queue_depth"] >= 256
+        assert row["speedup_vs_eager"] >= 3.0, (
+            f"{mode} admission only {row['speedup_vs_eager']:.2f}x eager")
+    for pattern in ("poisson", "diurnal", "burst"):
+        row = rows[f"serve_{pattern}"]
+        for metric in ("decisions_per_s", "adm_p50_ms", "adm_p95_ms",
+                       "adm_p99_ms", "evict_rate", "qos_final"):
+            assert metric in row, f"serve_{pattern} missing {metric}"
+        assert row["adm_p50_ms"] <= row["adm_p95_ms"] <= row["adm_p99_ms"]
+
+
 def test_record_run_migrates_legacy_and_appends(tmp_path):
     sys.path.insert(0, str(ROOT))
     try:

@@ -1,8 +1,10 @@
-"""Serving engine: Flex admission vs reserve, eviction, stragglers."""
+"""Serving engine: Flex admission vs reserve, eviction, stragglers,
+eviction/re-queue invariants, and registry policy resolution."""
 import numpy as np
+import pytest
 
 from repro.serving.engine import (AdmissionPolicy, EngineConfig, Request,
-                                  ServeEngine)
+                                  ServeEngine, resolve_engine_policy)
 
 
 def _reqs(n, over=3.0, true=20, prompt=20, seed=0):
@@ -63,3 +65,130 @@ def test_straggler_avoidance():
         eng.submit(r)
     eng.step()
     assert len(eng.active[0]) > len(eng.active[1])
+
+
+# ---------------------------------------------------------------------------
+# eviction / re-queue invariants (ISSUE 7 satellite)
+# ---------------------------------------------------------------------------
+
+def _overflow_engine():
+    """One replica, honest clients (declared == true): flex over-admits by
+    usage and MUST overflow once generation catches up."""
+    eng = ServeEngine(EngineConfig(
+        n_replicas=1, kv_budget_tokens=300, policy="flex",
+        max_active_per_replica=16))
+    for r in _reqs(12, over=1.0, true=60, prompt=40):
+        eng.submit(r)
+    return eng
+
+
+def test_eviction_order_newest_admission_first():
+    """Victims are the most recently admitted residents, evicted in
+    reverse admission order (LIFO), until the replica fits again."""
+    admit_order, evict_log = [], []
+    eng = _overflow_engine()
+    eng.on_admit = lambda r: admit_order.append(r.rid)
+    eng.on_evict = lambda r: evict_log.append(
+        (r.rid, [q.rid for q in eng.active[0]]))
+    eng.run(60)
+    assert evict_log, "overflow scenario produced no evictions"
+    seniority = {rid: k for k, rid in enumerate(admit_order)}
+    for rid, residents_after in evict_log:
+        # every request still resident when rid was evicted was admitted
+        # no later than rid (ties: re-admissions refresh seniority)
+        assert all(seniority[q] <= seniority[rid] for q in residents_after)
+
+
+def test_evicted_requests_requeue_fifo_stable():
+    """Evicted requests re-enter the queue ahead of fresh arrivals, in
+    their original admission order, with progress reset."""
+    eng = _overflow_engine()
+    evicted_this_step = []
+    eng.on_evict = lambda r: evicted_this_step.append(r.rid)
+    for _ in range(60):
+        evicted_this_step.clear()
+        head_before = [r.rid for r in eng.queue]
+        eng.step()
+        if evicted_this_step:
+            victims = [r for r in eng.queue
+                       if r.rid in set(evicted_this_step)]
+            # progress reset, detached from the replica
+            assert all(r.generated == 0 and r.replica == -1 and not r.done
+                       for r in victims)
+            # FIFO-stable: victims sit at the head in admission (= rid
+            # submission) order, ahead of everything previously queued
+            rids = [r.rid for r in eng.queue]
+            n = len(evicted_this_step)
+            assert rids[:n] == sorted(evicted_this_step)
+            assert rids[n:] == head_before
+
+
+def test_eviction_counters_monotone():
+    eng = _overflow_engine()
+    per_req_max = {}
+    last_events = 0
+    for _ in range(60):
+        eng.step()
+        assert eng.stats.evicted_events >= last_events
+        last_events = eng.stats.evicted_events
+        for reqs in list(eng.active.values()) + [list(eng.queue)]:
+            for r in reqs:
+                assert r.evictions >= per_req_max.get(r.rid, 0)
+                per_req_max[r.rid] = r.evictions
+    assert last_events > 0
+    assert last_events == sum(per_req_max.values())
+
+
+def test_no_request_both_done_and_resident():
+    """A finished request leaves its replica the same step it completes;
+    a resident (or queued) request is never marked done."""
+    eng = _overflow_engine()
+    done_rids = set()
+    for _ in range(60):
+        eng.step()
+        for i, reqs in eng.active.items():
+            for r in reqs:
+                assert not r.done, f"done request {r.rid} resident on {i}"
+                assert r.replica == i
+        for r in eng.queue:
+            assert not r.done and r.replica == -1
+        done_rids = {r.rid for i in eng.active for r in eng.active[i]
+                     if r.done} | done_rids
+    assert not done_rids
+
+
+# ---------------------------------------------------------------------------
+# registry policy resolution (ISSUE 7 satellite fix)
+# ---------------------------------------------------------------------------
+
+def test_policy_resolves_through_registry():
+    assert resolve_engine_policy("flex").name == "flex-f"
+    assert resolve_engine_policy(AdmissionPolicy.FLEX).name == "flex-f"
+    assert resolve_engine_policy("reserve").name == "least-fit"
+    assert resolve_engine_policy(AdmissionPolicy.RESERVE).name == "least-fit"
+    # any registered policy name is a valid serving policy now
+    assert resolve_engine_policy("flex-priority").name == "flex-priority"
+    assert resolve_engine_policy("best-fit-usage").name == "best-fit-usage"
+
+
+def test_unknown_policy_name_errors():
+    """Unknown names must raise (listing what IS registered), not fall
+    through to FLEX semantics as the pre-registry engine did."""
+    with pytest.raises(KeyError, match="registered"):
+        ServeEngine(EngineConfig(n_replicas=2, policy="flex-typo"))
+
+
+def test_registry_policy_runs_end_to_end():
+    eng = ServeEngine(EngineConfig(
+        n_replicas=2, kv_budget_tokens=400, policy="flex-priority",
+        max_active_per_replica=8, admit_batch=16))
+    for r in _reqs(12, true=20):
+        r.priority = r.rid % 2
+        eng.submit(r)
+    stats = eng.run(60)
+    assert stats.finished == 12
+
+
+def test_unknown_admission_mode_errors():
+    with pytest.raises(ValueError, match="admission_mode"):
+        ServeEngine(EngineConfig(n_replicas=2, admission_mode="batchy"))

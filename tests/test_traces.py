@@ -1,7 +1,9 @@
 import numpy as np
+import pytest
 
 from repro.core.types import NUM_RESOURCES
-from repro.traces import (generate_calibrated, generate_taskset,
+from repro.traces import (ARRIVAL_PATTERNS, arrival_counts,
+                          generate_calibrated, generate_taskset,
                           scale_demand)
 from repro.traces.generator import TraceParams
 
@@ -40,3 +42,74 @@ def test_scale_demand_leaves_requests():
                                   np.asarray(ts2.request))
     assert np.asarray(ts2.mean_usage).mean() > np.asarray(
         ts.mean_usage).mean()
+
+
+# ---------------------------------------------------------------------------
+# open-loop arrival processes (serving.stream drivers, ISSUE 7 satellite)
+# ---------------------------------------------------------------------------
+
+def test_arrival_counts_basics():
+    for pattern in ARRIVAL_PATTERNS:
+        counts = arrival_counts(0, 400, 6.0, pattern)
+        assert counts.shape == (400,)
+        assert np.issubdtype(counts.dtype, np.integer)
+        assert (counts >= 0).all()
+        # seeded determinism
+        np.testing.assert_array_equal(
+            counts, arrival_counts(0, 400, 6.0, pattern))
+    with pytest.raises(ValueError, match="unknown arrival pattern"):
+        arrival_counts(0, 10, 1.0, "lumpy")
+
+
+def test_poisson_arrivals_chi_square():
+    """Homogeneous Poisson: count histogram within chi-square tolerance
+    of the Poisson pmf, and index of dispersion ~ 1."""
+    stats = pytest.importorskip("scipy.stats")
+    lam, n = 4.0, 20000
+    counts = arrival_counts(123, n, lam, "poisson")
+    dispersion = counts.var() / counts.mean()
+    assert 0.95 < dispersion < 1.05
+    # bin counts 0..K, pool the tail so expected >= 5 everywhere
+    kmax = int(stats.poisson.ppf(0.999, lam))
+    observed = np.bincount(np.minimum(counts, kmax), minlength=kmax + 1)
+    expected = stats.poisson.pmf(np.arange(kmax + 1), lam)
+    expected[-1] = 1.0 - expected[:-1].sum()
+    expected = expected * n
+    keep = expected >= 5
+    chi2, p = stats.chisquare(observed[keep], expected[keep]
+                              * observed[keep].sum() / expected[keep].sum())
+    assert p > 0.01, f"Poisson chi-square rejected (p={p:.4f})"
+
+
+def test_diurnal_arrivals_peak_where_configured():
+    """Sinusoidal rate peaks at a quarter period and troughs at three
+    quarters; the mean rate is preserved."""
+    period, reps = 96, 200
+    horizon = period * reps
+    counts = arrival_counts(7, horizon, 8.0, "diurnal",
+                            diurnal_amp=0.6, diurnal_period=period)
+    by_phase = counts.reshape(reps, period).mean(axis=0)
+    peak, trough = int(np.argmax(by_phase)), int(np.argmin(by_phase))
+    assert abs(peak - period // 4) <= period // 12
+    assert abs(trough - 3 * period // 4) <= period // 12
+    assert abs(counts.mean() - 8.0) < 0.25
+    # modulation depth roughly matches the configured amplitude
+    amp = (by_phase.max() - by_phase.min()) / (2 * counts.mean())
+    assert 0.4 < amp < 0.8
+
+
+@pytest.mark.slow
+def test_burst_arrivals_overdispersed():
+    """Doubly-stochastic bursts: mean preserved, index of dispersion
+    matches the configured overdispersion (> 1), Poisson stays at 1."""
+    lam, n = 6.0, 200000
+    p, m = 0.05, 10.0
+    counts = arrival_counts(99, n, lam, "burst", burst_prob=p, burst_mult=m)
+    assert abs(counts.mean() - lam) < 0.1
+    # var/mean = 1 + lam * p(1-p)(m-1)^2 / (1 + p(m-1))^2
+    expected = 1.0 + lam * p * (1 - p) * (m - 1) ** 2 / (1 + p * (m - 1)) ** 2
+    dispersion = counts.var() / counts.mean()
+    assert abs(dispersion - expected) / expected < 0.15, (
+        f"dispersion {dispersion:.2f}, expected {expected:.2f}")
+    poisson = arrival_counts(99, n, lam, "poisson")
+    assert 0.97 < poisson.var() / poisson.mean() < 1.03
