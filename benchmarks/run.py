@@ -35,18 +35,32 @@ BENCHES = [
     "bench_estimator_gap",
     "bench_scheduler_throughput",
     "bench_serving",
+    "bench_fault_recovery",
     "bench_roofline",
 ]
 
 
 def _git_commit() -> str:
+    """Short HEAD hash, suffixed ``+dirty`` when the worktree has
+    uncommitted changes — so a trajectory row can never silently pass off
+    a dirty-tree measurement as the clean commit it names
+    (``check_bench.py`` diffs against the nearest same-dirtiness run).
+    """
     try:
-        return subprocess.run(
+        commit = subprocess.run(
             ["git", "rev-parse", "--short", "HEAD"],
             capture_output=True, text=True, check=True,
         ).stdout.strip() or "unknown"
     except Exception:
         return "unknown"
+    try:
+        dirty = bool(subprocess.run(
+            ["git", "status", "--porcelain"],
+            capture_output=True, text=True, check=True,
+        ).stdout.strip())
+    except Exception:
+        return commit
+    return commit + "+dirty" if dirty else commit
 
 
 def record_run(path: str, bench: str, rows, *, commit: str,

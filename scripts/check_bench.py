@@ -34,14 +34,16 @@ METRIC = "decisions_per_s"
 
 # Trajectories that must exist in the repo root (checked when running on
 # the default glob): the serving trajectory is the regression record for
-# the engine admission hot loop (ISSUE 7) — losing the file would
-# silently drop the guard.
-REQUIRED_FILES = ("BENCH_serving.json",)
+# the engine admission hot loop (ISSUE 7), the fault-recovery trajectory
+# the robustness record for the crash-burst scenario (ISSUE 8) — losing
+# either file would silently drop its guard.
+REQUIRED_FILES = ("BENCH_serving.json", "BENCH_fault_recovery.json")
 
 # Per-bench metrics every row must carry (beyond 'us_per_call'): without
 # them the regression diff has nothing to compare.
 REQUIRED_METRICS = {
     "serving": (METRIC,),
+    "fault_recovery": ("recovery_slots",),
 }
 
 
@@ -106,26 +108,44 @@ def schema_problems(path: str, doc) -> list:
     return out
 
 
+def _is_dirty(run) -> bool:
+    commit = run.get("commit") if isinstance(run, dict) else None
+    return isinstance(commit, str) and commit.endswith("+dirty")
+
+
 def regressions(doc) -> list:
     """Rows of the latest run whose decisions/sec regressed > THRESHOLD
-    vs the same-named row of the previous run."""
+    vs the same-named row of the baseline run.
+
+    The baseline is the NEAREST PREVIOUS RUN WITH THE SAME DIRTINESS
+    (``benchmarks/run.py`` tags worktree-dirty measurements with a
+    ``+dirty`` commit suffix): a dirty-tree run is never silently
+    compared against a clean commit or vice versa — dirty trees carry
+    un-reviewed code whose perf says nothing about the named commit.
+    With no same-dirtiness predecessor there is nothing honest to diff.
+    """
     runs = doc.get("runs", []) if isinstance(doc, dict) else []
     if len(runs) < 2:
+        return []
+    latest = runs[-1]
+    base_run = next((r for r in reversed(runs[:-1])
+                     if _is_dirty(r) == _is_dirty(latest)), None)
+    if base_run is None:
         return []
     def metric_map(run):
         return {row["name"]: row[METRIC] for row in run.get("rows", [])
                 if isinstance(row, dict) and isinstance(row.get(METRIC),
                                                         numbers.Real)
                 and isinstance(row.get("name"), str)}
-    base, latest = metric_map(runs[-2]), metric_map(runs[-1])
+    base, latest_map = metric_map(base_run), metric_map(latest)
     out = []
-    for name, val in latest.items():
+    for name, val in latest_map.items():
         ref = base.get(name)
         if ref and ref > 0 and val < (1.0 - THRESHOLD) * ref:
             out.append(
                 f"{name}: {METRIC} {val:.1f} is "
                 f"{(1 - val / ref) * 100:.0f}% below run "
-                f"{runs[-2].get('commit', '?')} ({ref:.1f})")
+                f"{base_run.get('commit', '?')} ({ref:.1f})")
     return out
 
 

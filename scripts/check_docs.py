@@ -26,6 +26,10 @@ Fails (exit 1 / non-empty problem list) when:
     knob (serving engine) is undocumented there, or ``docs/kernels.md``
     stops mentioning the wavefront path's two front-ends (simulator
     scan + serving engine);
+  * ``docs/api.md`` lost its "Faults & degradation" section, a
+    ``FaultConfig`` knob is undocumented there, or ``docs/kernels.md``
+    stops mentioning that fault eviction rides the shared admission
+    path (``mask_unavailable`` load offsets);
   * a cross-linked docs file (``docs/kernels.md``) has gone missing.
 
 Run standalone (``python scripts/check_docs.py``) or through the tier-1
@@ -121,10 +125,30 @@ def problems() -> list:
     from repro.core.types import SimConfig
     for knob in ("wavefront_topk", "dedup_buckets", "wavefront_tie_margin",
                  "estimator", "reclamation", "reclaim_margin",
-                 "reclaim_pool"):
+                 "reclaim_pool", "retry_backoff", "retry_backoff_cap",
+                 "faults"):
         if knob in SimConfig._fields and f"`{knob}`" not in api_md:
             out.append(
                 f"SimConfig field {knob!r} is not documented in docs/api.md")
+
+    # Fault injection: every FaultConfig knob must appear in the
+    # "Faults & degradation" section of docs/api.md — the fault surface
+    # is config-driven, so an undocumented knob is an invisible one —
+    # and docs/kernels.md must keep the note that fault eviction rides
+    # the shared admission core (mask_unavailable), not a side path.
+    from repro.faults import FaultConfig
+    if "## Faults & degradation" not in api_md:
+        out.append("docs/api.md has no '## Faults & degradation' section "
+                   "but repro.faults exposes the fault-injection API")
+    for knob in FaultConfig._fields:
+        if f"`{knob}`" not in api_md:
+            out.append(
+                f"FaultConfig knob {knob!r} is not documented in "
+                f"docs/api.md")
+    if kernels_md and "fault eviction" not in kernels_md:
+        out.append(
+            "docs/kernels.md does not mention that fault eviction reuses "
+            "the shared admission path (mask_unavailable load offsets)")
 
     # Serving engine: every EngineConfig knob must be documented in the
     # "Serving" section of docs/api.md (the knob set grew with the

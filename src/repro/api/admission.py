@@ -50,6 +50,32 @@ def usage_load(est_usage, reserved, penalty):
     return penalty * est_usage + reserved
 
 
+def fault_load_offset(node_up, capacity, drain_load=1e6):
+    """(N,) load offset expressing node faults to EVERY admission policy.
+
+    Down nodes get ``drain_load`` (far above any capacity or theta, so
+    both load models reject every candidate); capacity-flapped nodes get
+    the lost fraction ``1 - capacity``.  Healthy nodes get exactly 0.0, so
+    the identity schedule is bit-identical to no faults.
+    """
+    xp = _xp(capacity)
+    return xp.where(node_up, 1.0 - capacity, drain_load).astype(capacity.dtype)
+
+
+def mask_unavailable(node: "NodeState", offset) -> "NodeState":
+    """Fold a per-node fault offset into a NodeState's reservations.
+
+    ``reserved`` rides both load models — ``committed_load`` (RLB) and
+    ``usage_load`` (ULB) — and the fused-kernel template's reserved plane,
+    so one scatter makes crashed/degraded nodes unattractive (or
+    unadmittable) to every registry policy and every execution mode with
+    no policy-specific branches.  The offset is constant within a slot,
+    which is exactly the admission-invariance the wavefront conflict
+    checks assume (docs/kernels.md).
+    """
+    return node._replace(reserved=node.reserved + offset[:, None])
+
+
 # ---------------------------------------------------------------------------
 # Filter + score primitives
 # ---------------------------------------------------------------------------

@@ -243,6 +243,45 @@ class ReclaimPolicy(FlexFifoPolicy):
             cap=self._cap(ctx).astype(jnp.float32))
 
 
+@register_policy("flex-brownout")
+@dataclasses.dataclass(frozen=True)
+class BrownoutPolicy(FlexFifoPolicy):
+    """QoS-pressure brownout through the registry: batch capacity shrinks
+    with the live penalty.
+
+    The degradation story (``repro.faults``) expressed as a pure policy:
+    CLASS_BATCH tasks may only fill nodes up to
+    ``clip(1 - brownout_scale * (P - p_min), floor, 1)`` while
+    production/system tasks keep the full capacity.  QoS violations push
+    the penalty P up, so batch admissions brown out automatically under
+    pressure and recover as the controller earns trust back — no
+    controller wiring, no new enum branches.  The priority- and
+    penalty-dependent cap rides the kernel template's per-task ``cap``
+    scalar (admission-invariant within a slot), so the policy runs
+    unchanged through every execution mode including
+    ``admit_queue_wavefront``.
+    """
+
+    name = "flex-brownout"
+    brownout_scale: float = 0.25
+    floor: float = 0.2
+
+    def _cap(self, ctx: PolicyContext, task: TaskView) -> jnp.ndarray:
+        batch_cap = jnp.clip(
+            1.0 - self.brownout_scale * (ctx.penalty - ctx.params.p_min),
+            self.floor, 1.0)
+        return jnp.where(task.priority >= CLASS_PRODUCTION, 1.0, batch_cap)
+
+    def feasible(self, ctx: PolicyContext, task: TaskView) -> jnp.ndarray:
+        return admission.fits(self._load(ctx), task.request,
+                              self._cap(ctx, task))
+
+    def kernel_inputs(self, ctx: PolicyContext,
+                      task: TaskView) -> admission.KernelInputs:
+        return super().kernel_inputs(ctx, task)._replace(
+            cap=self._cap(ctx, task).astype(jnp.float32))
+
+
 # ---------------------------------------------------------------------------
 # Estimators (protocol wrappers over repro.core.estimator)
 #

@@ -77,10 +77,14 @@ def wfs_allocate(
     placement: jnp.ndarray,   # (T,) node idx, -1 when unplaced
     active: jnp.ndarray,      # (T,) bool
     num_nodes: int,
-    capacity: float = 1.0,
+    capacity=1.0,             # scalar, (N,) or (N, R) — per-node capacity
     iters: int = 4,
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Allocate actual resources per task (paper §3 'Resource allocation').
+
+    ``capacity`` broadcasts from a scalar (every node, every resource) up
+    to a full (N, R) table — per-node values express transient capacity
+    loss (fault-injection flaps, ``repro.faults``).
 
     Returns:
       alloc: (T, R) realized allocation a_j (0 for inactive tasks).
@@ -89,7 +93,14 @@ def wfs_allocate(
     mask = active.astype(jnp.float32)
     seg = jnp.where(active, placement, num_nodes - 1)  # park inactive anywhere
     seg = jnp.clip(seg, 0, num_nodes - 1)
-    cap_node = jnp.full((num_nodes, demand.shape[-1]), capacity, jnp.float32)
+    r = demand.shape[-1]
+    cap = jnp.asarray(capacity, jnp.float32)
+    if cap.ndim == 0:
+        cap_node = jnp.full((num_nodes, r), cap, jnp.float32)
+    elif cap.ndim == 1:
+        cap_node = jnp.broadcast_to(cap[:, None], (num_nodes, r))
+    else:
+        cap_node = jnp.broadcast_to(cap, (num_nodes, r))
 
     weights = jnp.maximum(jnp.max(request, axis=-1), _EPS)  # WFS weight ~ request
 

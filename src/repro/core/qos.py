@@ -29,3 +29,30 @@ def cluster_qos(q: jnp.ndarray, active: jnp.ndarray) -> jnp.ndarray:
 def violation_fraction(qos_series: jnp.ndarray, target: float) -> jnp.ndarray:
     """Fraction of time slots where Q(t) < rho (paper Fig. 7b)."""
     return jnp.mean((qos_series < target).astype(jnp.float32))
+
+
+def recovery_slots(qos_series: jnp.ndarray, target: float,
+                   consecutive: int = 3) -> jnp.ndarray:
+    """Slots from the first QoS violation back to sustained health.
+
+    Fault-recovery observability (``repro.faults``): the onset is the first
+    slot with ``Q(t) < target``; recovery is the first slot at/after onset
+    opening a run of ``consecutive`` slots all >= target.  Returns 0 when
+    the series never violates, and ``len(series) - onset`` (the worst case)
+    when it never recovers.  Trailing slots that cannot fit a full run
+    count as recovered if every remaining slot is healthy.
+    """
+    s = qos_series.shape[0]
+    below = qos_series < target
+    onset = jnp.argmax(below)                      # 0 when never below
+    good = (~below).astype(jnp.float32)
+    w = min(max(int(consecutive), 1), s)
+    # run[t] = 1 iff slots [t, min(t+w, S)) are all healthy (tail windows
+    # shrink: a healthy tail counts as recovered).
+    c = jnp.cumsum(jnp.concatenate([jnp.zeros((1,), jnp.float32), good]))
+    hi = jnp.minimum(jnp.arange(s) + w, s)
+    run = (c[hi] - c[:-1]) >= (hi - jnp.arange(s)).astype(jnp.float32)
+    t = jnp.arange(s)
+    cand = run & (t >= onset)
+    rec = jnp.where(jnp.any(cand), jnp.argmax(cand), s)
+    return jnp.where(jnp.any(below), rec - onset, 0).astype(jnp.int32)

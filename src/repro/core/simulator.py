@@ -12,18 +12,36 @@ Placement is pluggable: the simulator is generic over a
 resolved through the registry shim (``repro.api.registry.KIND_TO_NAME``).
 
 Per-slot pipeline (semantics match Kubernetes + Alg. 3):
+  0. with faults (``SimConfig(faults=...)`` or an explicit
+     ``fault_schedule``): evict tasks resident on crashed nodes back into
+     the retry queue with exponential backoff, and — when the degradation
+     controller's windowed cluster-QoS trend signals pressure — shed up to
+     ``degrade_evict`` resident tasks, reclaimed/low-safety-cap tasks
+     first (``repro.faults.degrade``); shed tasks drop into the reclaim
+     pool when reclamation is on, else rejoin the retry queue
   1. recompute node aggregates from task lifetimes (handles task finishes)
-  2. evolve each task's demand process (AR(1) around its mean, clipped at peak)
-  3. run the WFS allocator -> realized usage per node, QoS q_j and Q(t)
+  2. evolve each task's demand process (AR(1) around its mean, clipped at
+     peak); fault surges multiply resident tasks' demand
+  3. run the WFS allocator (per-node capacity honours fault flaps)
+     -> realized usage per node, QoS q_j and Q(t); evicted tasks count as
+     QoS violators in their eviction slot (an eviction IS a broken SLO)
   4. PeriodicEstimationPenaltyUpdate on the controller state
-  5. refresh the load estimator, clear reservations
+  5. refresh the load estimator, clear reservations; crashed/flapped nodes
+     fold their lost capacity into ``reserved``
+     (``admission.mask_unavailable``) so every policy avoids them
   6. order the queue via the policy's queue_order hook (FIFO when absent)
-     and admit retries + this slot's arrivals sequentially
+     and admit retries + this slot's arrivals sequentially; tasks inside
+     their backoff window (``SimConfig.retry_backoff``) stay queued
+     without consuming an attempt
   7. with ``SimConfig(reclamation=True)``: merge permanently-dropped tasks
      into a bounded pool and re-admit it against PREDICTED headroom
      (allocation minus predicted usage minus a penalty-derived safety
      margin) via the ``reclaim`` policy — through the same
      ``admit_queue_wavefront`` path as primary admission
+
+``faults=None`` with ``retry_backoff=0`` (the defaults) compiles the exact
+pre-fault program — bit-identical decisions (tests/test_faults.py asserts
+the identity schedule matches it too).
 
 Estimators are the stateful ``init_state``/``refresh`` pair of
 ``repro.estimators`` (windowed estimators carry static ring buffers
@@ -73,6 +91,13 @@ from repro.core.types import (
 # names (classes/functions) from repro.api at this level would break that
 # direction of the cycle.
 from repro.api import admission
+from repro.faults import degrade as _degrade
+from repro.faults import injection as _inject
+
+# fold_in data for the dedicated fault-sampling stream: outside [0, n_slots)
+# for any plausible horizon, so the per-slot demand-noise stream
+# (fold_in(key, slot)) is untouched and faults=None stays bit-identical.
+_FAULT_STREAM = 0x7FFFFFFF
 
 
 def build_arrival_table(arrival: np.ndarray, n_slots: int,
@@ -125,6 +150,7 @@ def simulate_core(
     key: jax.Array,
     est,                          # Estimator (hashable, static)
     ctrl_impl,                    # PenaltyController (hashable, static)
+    fault_schedule=None,          # repro.faults.FaultSchedule (traced) or None
 ) -> SimResult:
     from repro.api.protocols import policy_queue_order
 
@@ -136,6 +162,23 @@ def simulate_core(
     T = ts.num_tasks
     Qr = cfg.retry_capacity
     queue_order = policy_queue_order(policy)
+
+    # Fault gating is PYTHON-LEVEL: faults=None traces the exact legacy
+    # program (bit-identical decisions, zero overhead).
+    fcfg = cfg.faults
+    faults_on = fcfg is not None or fault_schedule is not None
+    backoff_on = faults_on or cfg.retry_backoff > 0
+    degrade_on = bool(faults_on and fcfg is not None and fcfg.degrade)
+    if faults_on and fault_schedule is None:
+        fault_schedule = _inject.sample_schedule(
+            fcfg, jax.random.fold_in(key, _FAULT_STREAM), n_slots, n_nodes)
+    if degrade_on:
+        thr = (jnp.float32(fcfg.degrade_threshold)
+               if fcfg.degrade_threshold > 0 else params.qos_target)
+    # Degrade victims are shed INTO the reclaim pool when reclamation is
+    # on (the penalty-gated reclaim pass re-admits them once pressure
+    # clears); without reclamation they rejoin the retry queue + backoff.
+    shed_to_pool = degrade_on and cfg.reclamation
 
     init = dict(
         node=NodeState.zeros(n_nodes),
@@ -156,15 +199,82 @@ def simulate_core(
         reclaim_policy = ReclaimPolicy(margin_scale=cfg.reclaim_margin)
         init["pool"] = jnp.full((cfg.reclaim_pool,), -1, jnp.int32)
         init["n_reclaimed"] = jnp.zeros((), jnp.int32)
+    if backoff_on:
+        init["next_try"] = jnp.zeros((T,), jnp.int32)
+    if faults_on:
+        init["n_fault_evicted"] = jnp.zeros((), jnp.int32)
+    if degrade_on:
+        init["qos_win"] = jnp.ones((fcfg.qos_window,), jnp.float32)
+        init["n_degrade_evicted"] = jnp.zeros((), jnp.int32)
+    if degrade_on and cfg.reclamation:
+        init["reclaimed"] = jnp.zeros((T,), bool)
 
     demand_scale = jnp.asarray(cfg.demand_scale, jnp.float32)
 
+    def _compact_ids(mask, width):
+        """Ids of set tasks, lowest index first, (width,) padded with -1."""
+        k = min(width, T)
+        keyv = jnp.where(mask, -jnp.arange(T, dtype=jnp.int32),
+                         jnp.int32(-T - 1))
+        top_val, top_idx = jax.lax.top_k(keyv, k)
+        ids = jnp.where(top_val > -T - 1, top_idx.astype(jnp.int32), -1)
+        if k < width:
+            ids = jnp.concatenate(
+                [ids, jnp.full((width - k,), -1, jnp.int32)])
+        return ids
+
     def slot_step(carry, xs):
-        slot, arrivals = xs  # arrivals: (A,) i32
+        if faults_on:
+            slot, arrivals, slot_up, slot_cap, slot_mult = xs
+        else:
+            slot, arrivals = xs  # arrivals: (A,) i32
+
+        placement_in = carry["placement"]
+        admit_in = carry["admit_slot"]
+        attempts = carry["attempts"]
+        if backoff_on:
+            next_try = carry["next_try"]
+
+        # --- 0. fault + degradation evictions ------------------------------
+        # Before the aggregates, so freed capacity is admissible this slot.
+        if faults_on:
+            resident = (placement_in >= 0) & (slot <= admit_in + ts.duration)
+            on_down = resident & ~slot_up[jnp.clip(placement_in, 0,
+                                                   n_nodes - 1)]
+            n_fault_ev = (carry["n_fault_evicted"]
+                          + jnp.sum(on_down.astype(jnp.int32)))
+            evict_mask = on_down
+            degrade_mask = jnp.zeros((T,), bool)
+            if degrade_on:
+                pressure = _degrade.under_pressure(carry["qos_win"], thr)
+                reclaimed = (carry["reclaimed"] if cfg.reclamation
+                             else jnp.zeros((T,), bool))
+                rank = _degrade.victim_rank(ts.priority, reclaimed,
+                                            fcfg.degrade_spare_production)
+                degrade_mask = _degrade.select_victims(
+                    resident & ~on_down & pressure, rank, admit_in,
+                    n_slots, fcfg.degrade_evict)
+                evict_mask = on_down | degrade_mask
+                n_degrade_ev = (carry["n_degrade_evicted"]
+                                + jnp.sum(degrade_mask.astype(jnp.int32)))
+            placement_in = jnp.where(evict_mask, -1, placement_in)
+            admit_in = jnp.where(evict_mask, -1, admit_in)
+            # Evictions routed through the retry queue consume an attempt
+            # and arm the exponential backoff (generalizing max_retries);
+            # pool-shed victims wait on the reclaim pass instead.
+            retry_evict = on_down if shed_to_pool else evict_mask
+            attempts = attempts + retry_evict.astype(jnp.int32)
+            next_try = jnp.where(
+                retry_evict,
+                slot + 1 + _inject.backoff_delay(
+                    attempts, cfg.retry_backoff, cfg.retry_backoff_cap),
+                next_try)
+            evict_requeue = retry_evict & (attempts <= cfg.max_retries)
+            evict_exhausted = retry_evict & (attempts > cfg.max_retries)
 
         # --- 1. node aggregates for the active set -----------------------
         active, seg, requested, n_tasks, src_count = _node_aggregates(
-            ts, carry["placement"], carry["admit_slot"], slot, n_nodes)
+            ts, placement_in, admit_in, slot, n_nodes)
 
         # --- 2. demand process: AR(1) around the task mean ----------------
         k_slot = jax.random.fold_in(key, slot)
@@ -174,14 +284,25 @@ def simulate_core(
         demand = jnp.clip(
             ts.mean_usage + ts.std_usage * noise[:, None],
             0.0, ts.peak_usage) * demand_scale
+        if faults_on:
+            # black-swan surge: resident tasks on surging nodes spike
+            task_mult = jnp.where(active, slot_mult[seg], 1.0)
+            demand = demand * task_mult[:, None]
         demand = jnp.minimum(demand, 1.0)  # a task never exceeds one node
 
         # --- 3. allocation + QoS ------------------------------------------
+        wfs_cap = (jnp.where(slot_up, slot_cap, 0.0) if faults_on else 1.0)
         alloc, node_usage = allocation.wfs_allocate(
-            demand, ts.request, carry["placement"], active, n_nodes,
-            capacity=1.0, iters=cfg.wfs_iters)
+            demand, ts.request, placement_in, active, n_nodes,
+            capacity=wfs_cap, iters=cfg.wfs_iters)
         q_task = qos.task_qos(alloc, demand, ts.request)
-        q_cluster = qos.cluster_qos(q_task, active)
+        if faults_on:
+            # an eviction IS a broken SLO: victims count as active
+            # violators in their eviction slot
+            q_cluster = qos.cluster_qos(q_task & ~evict_mask,
+                                        active | evict_mask)
+        else:
+            q_cluster = qos.cluster_qos(q_task, active)
 
         qos_ok = carry["qos_ok"] + (q_task & active).astype(jnp.int32)
         active_cnt = carry["active_cnt"] + active.astype(jnp.int32)
@@ -199,6 +320,9 @@ def simulate_core(
             n_tasks=n_tasks,
             src_count=src_count,
         )
+        if faults_on:
+            f_off = admission.fault_load_offset(slot_up, slot_cap)
+            node = admission.mask_unavailable(node, f_off)
 
         # --- 6. scheduling: retries first, then new arrivals ---------------
         queue_ids = jnp.concatenate([carry["retry"], arrivals])       # (Qr+A,)
@@ -211,32 +335,64 @@ def simulate_core(
             queue_ids = queue_ids[order]
         valid = queue_ids >= 0
         qi = jnp.maximum(queue_ids, 0)
+        if backoff_on:
+            # tasks inside their backoff window stay queued, no attempt
+            ready = valid & (slot >= next_try[qi])
+        else:
+            ready = valid
         node, placed_idx = admission.admit_queue(
             policy, node, ts.request[qi], ts.src[qi], ts.priority[qi],
-            valid, ctrl.penalty, params,
+            ready, ctrl.penalty, params,
             use_kernel=cfg.use_kernel, interpret=cfg.kernel_interpret,
             batch_mode=cfg.admission_mode == "wavefront",
             topk=cfg.wavefront_topk, dedup_buckets=cfg.dedup_buckets,
             tie_margin=cfg.wavefront_tie_margin)
 
-        ok = valid & (placed_idx >= 0)
+        ok = ready & (placed_idx >= 0)
         # scatter placements (unique ids per slot; -1 slots write a no-op max)
         cand_pl = jnp.where(ok, placed_idx, -1)
         cand_sl = jnp.where(ok, slot, -1)
-        placement = carry["placement"].at[qi].max(cand_pl)
-        admit_slot = carry["admit_slot"].at[qi].max(cand_sl)
+        placement = placement_in.at[qi].max(cand_pl)
+        admit_slot = admit_in.at[qi].max(cand_sl)
 
         # retry bookkeeping
-        failed = valid & (placed_idx < 0)
-        attempts = carry["attempts"].at[qi].add(failed.astype(jnp.int32))
+        failed = ready & (placed_idx < 0)
+        attempts = attempts.at[qi].add(failed.astype(jnp.int32))
+        if backoff_on:
+            delay = _inject.backoff_delay(
+                attempts[qi], cfg.retry_backoff, cfg.retry_backoff_cap)
+            # max-scatter: invalid queue slots (qi clamped to 0) contribute
+            # a no-op 0 instead of clobbering task 0's entry, and per-task
+            # next_try is monotone (later failures -> later slots + larger
+            # delays), so max IS the latest write.
+            next_try = next_try.at[qi].max(
+                jnp.where(failed, slot + 1 + delay, 0))
         eligible = failed & (attempts[qi] <= cfg.max_retries)
+        if backoff_on:
+            eligible = eligible | (valid & ~ready)   # deferred stay queued
         retry_order = jnp.argsort(~eligible, stable=True)   # eligible first
         sorted_ids = queue_ids[retry_order]
         n_eligible = jnp.sum(eligible.astype(jnp.int32))
         pos = jnp.arange(Qr, dtype=jnp.int32)
         new_retry = jnp.where(pos < n_eligible, sorted_ids[:Qr], -1)
-        n_dropped = (jnp.sum((failed & ~eligible).astype(jnp.int32))
+        exhausted = failed & (attempts[qi] > cfg.max_retries)
+        n_dropped = (jnp.sum(exhausted.astype(jnp.int32))
                      + jnp.maximum(n_eligible - Qr, 0))
+
+        # merge fault-evicted tasks into the rebuilt retry queue (they were
+        # resident, so they are NOT in this slot's queue): valid-first
+        # stable compaction keeps FIFO order, overflow drops or pools.
+        if faults_on:
+            ev_ids = _compact_ids(evict_requeue, Qr)
+            ev_lost = (jnp.sum(evict_requeue.astype(jnp.int32))
+                       - jnp.sum((ev_ids >= 0).astype(jnp.int32)))
+            merged_r = jnp.concatenate([new_retry, ev_ids])
+            merged_r = merged_r[jnp.argsort(merged_r < 0, stable=True)]
+            merge_over = merged_r[Qr:]                       # overflow ids
+            new_retry = merged_r[:Qr]
+            n_dropped = (n_dropped + ev_lost
+                         + jnp.sum((evict_exhausted).astype(jnp.int32))
+                         + jnp.sum((merge_over >= 0).astype(jnp.int32)))
 
         # --- 7. headroom reclamation (opt-in) ------------------------------
         if cfg.reclamation:
@@ -244,14 +400,23 @@ def simulate_core(
             # overflow) enter a bounded pool instead of being rejected;
             # only POOL overflow counts into n_rejected.
             rank = jnp.argsort(retry_order)         # queue pos -> sorted pos
-            pooled = (failed & ~eligible) | (eligible & (rank >= Qr))
-            merged = jnp.concatenate(
-                [carry["pool"], jnp.where(pooled, queue_ids, -1)])
+            pooled = exhausted | (eligible & (rank >= Qr))
+            parts = [carry["pool"], jnp.where(pooled, queue_ids, -1)]
+            if faults_on:
+                # fault evictions feed the pool too: retry overflow,
+                # exhausted evictions, and degrade-shed victims
+                pool_evict = evict_exhausted
+                if shed_to_pool:
+                    pool_evict = pool_evict | degrade_mask
+                parts += [merge_over, _compact_ids(pool_evict, Qr)]
+            merged = jnp.concatenate(parts)
             merged = merged[jnp.argsort(merged < 0, stable=True)]
             pool = merged[:cfg.reclaim_pool]
             n_rejected = carry["n_rejected"] + (
                 jnp.sum((merged >= 0).astype(jnp.int32))
                 - jnp.sum((pool >= 0).astype(jnp.int32)))
+            if faults_on:
+                n_rejected = n_rejected + ev_lost
 
             # Re-admit the pool against predicted headroom: the reclaim
             # policy judges nodes by P * L-hat + reserved against the
@@ -274,6 +439,12 @@ def simulate_core(
                            + jnp.sum(r_ok.astype(jnp.int32)))
             pool = jnp.where(r_ok, -1, pool)
             pool = pool[jnp.argsort(pool < 0, stable=True)]
+            if degrade_on:
+                # remember reclaim-admitted tasks: first in line when the
+                # degradation controller needs victims (low safety cap)
+                reclaimed_now = (reclaimed.astype(jnp.int32)
+                                 .at[pqi].max(r_ok.astype(jnp.int32)))
+                reclaimed = reclaimed_now.astype(bool)
         else:
             n_rejected = carry["n_rejected"] + n_dropped
             n_reclaimed = jnp.zeros((), jnp.int32)
@@ -281,9 +452,13 @@ def simulate_core(
         # --- metrics --------------------------------------------------------
         gate = cfg.record_node_usage
         empty = jnp.zeros((0, NUM_RESOURCES), jnp.float32)
+        req_total = jnp.sum(node.requested + node.reserved, axis=0)
+        if faults_on:
+            req_total = req_total - jnp.sum(f_off)   # undo the fault offset
+        zero_i = jnp.zeros((), jnp.int32)
         metrics = SlotMetrics(
             usage=jnp.sum(node_usage, axis=0) / n_nodes,
-            requested=jnp.sum(node.requested + node.reserved, axis=0) / n_nodes,
+            requested=req_total / n_nodes,
             qos=q_cluster,
             penalty=ctrl.penalty,
             usage_std=jnp.std(node_usage, axis=0),
@@ -295,6 +470,9 @@ def simulate_core(
             node_est=est_state.est if gate else empty,
             node_requested=requested if gate else empty,
             n_reclaimed=n_reclaimed,
+            n_fault_evicted=n_fault_ev if faults_on else zero_i,
+            n_degrade_evicted=n_degrade_ev if degrade_on else zero_i,
+            degraded=(pressure.astype(jnp.int32) if degrade_on else zero_i),
         )
 
         new_carry = dict(
@@ -306,10 +484,25 @@ def simulate_core(
         if cfg.reclamation:
             new_carry["pool"] = pool
             new_carry["n_reclaimed"] = n_reclaimed
+        if backoff_on:
+            new_carry["next_try"] = next_try
+        if faults_on:
+            new_carry["n_fault_evicted"] = n_fault_ev
+        if degrade_on:
+            new_carry["qos_win"] = _degrade.push_window(carry["qos_win"],
+                                                        q_cluster)
+            new_carry["n_degrade_evicted"] = n_degrade_ev
+        if degrade_on and cfg.reclamation:
+            new_carry["reclaimed"] = reclaimed
         return new_carry, metrics
 
     slots = jnp.arange(n_slots, dtype=jnp.int32)
-    final, metrics = jax.lax.scan(slot_step, init, (slots, arrival_table))
+    if faults_on:
+        xs = (slots, arrival_table, fault_schedule.node_up,
+              fault_schedule.capacity, fault_schedule.demand_mult)
+    else:
+        xs = (slots, arrival_table)
+    final, metrics = jax.lax.scan(slot_step, init, xs)
 
     return SimResult(
         metrics=metrics,
@@ -348,7 +541,8 @@ def _resolve(policy, params, estimator, estimator_kind, est_noise_std,
 def simulate(ts: TaskSet, arrival_table: jnp.ndarray, cfg: SimConfig,
              policy, params: FlexParams, key: jax.Array,
              estimator_kind: str = "current", est_noise_std: float = 0.0,
-             estimator=None, controller=None) -> SimResult:
+             estimator=None, controller=None,
+             fault_schedule=None) -> SimResult:
     """Jitted simulation with policy/estimator/controller normalization.
 
     ``policy`` may be a registry name, a ``SchedulerKind`` (legacy shim) or
@@ -356,12 +550,14 @@ def simulate(ts: TaskSet, arrival_table: jnp.ndarray, cfg: SimConfig,
     registry name or an estimator object (stateful or legacy stateless),
     ``SimConfig(estimator=...)`` selects one from the config, and
     ``estimator_kind`` keeps the historical string knob working.
+    ``fault_schedule`` injects an explicit ``repro.faults.FaultSchedule``
+    (overrides the sampling that ``SimConfig(faults=...)`` would do).
     """
     policy, params, est, ctrl_impl = _resolve(
         policy, params, estimator, estimator_kind, est_noise_std, controller,
         cfg)
     return simulate_core(ts, arrival_table, cfg, policy, params, key,
-                         est, ctrl_impl)
+                         est, ctrl_impl, fault_schedule)
 
 
 def run(ts: TaskSet, cfg: SimConfig, policy,

@@ -179,6 +179,19 @@ class SimConfig(NamedTuple):
     reclaim_pool: int = 256        # static width of the dropped-task pool
                                    # the reclaim pass draws from; pool
                                    # overflow counts into n_rejected
+    retry_backoff: int = 0         # exponential retry backoff base: a task
+                                   # whose admission failed a times waits
+                                   # min(retry_backoff * 2**(a-1),
+                                   # retry_backoff_cap) slots before its
+                                   # next attempt.  0 = legacy fixed
+                                   # re-queue (retry next slot),
+                                   # bit-identical to pre-backoff decisions
+    retry_backoff_cap: int = 64    # upper bound on the backoff delay (slots)
+    faults: "object | None" = None  # repro.faults.FaultConfig: deterministic
+                                    # fault injection + the QoS-pressure
+                                    # degradation controller.  None =
+                                    # bit-identical to the fault-free path
+                                    # (docs/api.md, "Faults & degradation")
 
 
 class SlotMetrics(NamedTuple):
@@ -204,6 +217,12 @@ class SlotMetrics(NamedTuple):
                                  # (S, 0, R) unless record_node_usage
     n_reclaimed: jnp.ndarray  # (S,) cumulative tasks admitted by the
                               # reclamation pass (0 unless SimConfig.reclamation)
+    n_fault_evicted: jnp.ndarray    # (S,) cumulative tasks evicted by node
+                                    # crashes (0 unless SimConfig.faults)
+    n_degrade_evicted: jnp.ndarray  # (S,) cumulative tasks shed by the
+                                    # degradation controller
+    degraded: jnp.ndarray     # (S,) i32 — 1 while the degradation
+                              # controller is in its pressure (shedding) mode
 
 
 class SimResult(NamedTuple):

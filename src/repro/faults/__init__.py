@@ -1,0 +1,33 @@
+"""Fault injection + QoS-pressure graceful degradation (ISSUE 8).
+
+Deterministic static-shape fault event tables threaded through both
+front-ends (the ``lax.scan`` simulator and the serving engine), plus the
+windowed-QoS degradation controller.  See ``repro.faults.injection`` and
+``repro.faults.degrade`` module docs, and docs/api.md "Faults &
+degradation".
+"""
+from repro.faults.degrade import (
+    push_window,
+    select_victims,
+    under_pressure,
+    victim_rank,
+)
+from repro.faults.injection import (
+    FaultConfig,
+    FaultSchedule,
+    backoff_delay,
+    crash_burst,
+    sample_schedule,
+)
+
+__all__ = [
+    "FaultConfig",
+    "FaultSchedule",
+    "backoff_delay",
+    "crash_burst",
+    "sample_schedule",
+    "push_window",
+    "select_victims",
+    "under_pressure",
+    "victim_rank",
+]

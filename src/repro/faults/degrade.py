@@ -1,0 +1,80 @@
+"""Graceful degradation under QoS pressure (the PR 6 follow-up).
+
+The controller watches a WINDOWED cluster-QoS trend (a static ring buffer
+riding the scan carry — one ``(W,)`` float per cluster) instead of the
+instantaneous Q(t): a single bad slot inside an otherwise healthy window
+does not trigger shedding, a sustained dip does.
+
+Under pressure the simulator evicts up to ``degrade_evict`` resident tasks
+per slot, RECLAIMED TASKS FIRST (they were admitted against predicted
+headroom under a low safety cap — the cheapest QoS insurance to cancel),
+then CLASS_BATCH tasks, sparing production/system work unless
+``degrade_spare_production=False`` (the naive evict-everything baseline the
+benchmark compares against).  Within a rank, the NEWEST admission pays
+first — the same victim order as the serving engine's overflow path.
+
+Victims re-enter the system through the EXISTING paths, no new enum
+branches: with reclamation on they drop into the reclaim pool (the
+penalty-gated ``reclaim`` policy re-admits them when pressure clears), and
+otherwise they rejoin the retry queue with exponential backoff.  The
+serving-engine analogue is admission brownout: under pressure, pending
+CLASS_BATCH requests are masked invalid in the shared ``admit_queue`` call
+(``repro.serving.engine``).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import CLASS_PRODUCTION
+
+# Victim ranking: higher evicts first.  0 = never evicted.
+_RANK_BATCH = 1
+_RANK_RECLAIMED = 2
+
+
+def push_window(window: jnp.ndarray, q: jnp.ndarray) -> jnp.ndarray:
+    """Shift the QoS ring one slot and insert ``q`` (newest at index 0)."""
+    return jnp.roll(window, 1).at[0].set(q)
+
+
+def under_pressure(window: jnp.ndarray, threshold) -> jnp.ndarray:
+    """() bool — windowed mean QoS below the pressure threshold."""
+    return jnp.mean(window) < threshold
+
+
+def victim_rank(priority: jnp.ndarray, reclaimed: jnp.ndarray,
+                spare_production: bool) -> jnp.ndarray:
+    """(T,) i32 eviction rank: reclaimed > batch > (production = spared).
+
+    With ``spare_production=False`` every task ranks >= 1 (evict-anything),
+    reclaimed tasks still first.
+    """
+    rank = jnp.where(reclaimed, _RANK_RECLAIMED, 0)
+    rank = jnp.maximum(rank,
+                       jnp.where(priority < CLASS_PRODUCTION, _RANK_BATCH, 0))
+    if not spare_production:
+        rank = jnp.maximum(rank, 1)
+    return rank.astype(jnp.int32)
+
+
+def select_victims(evictable: jnp.ndarray, rank: jnp.ndarray,
+                   admit_slot: jnp.ndarray, n_slots: int,
+                   max_evict: int) -> jnp.ndarray:
+    """(T,) bool mask of up to ``max_evict`` victims.
+
+    Order: rank descending, then newest admission first — a static
+    ``lax.top_k`` over a composite key, so the selection is one fused op
+    with no data-dependent shapes.
+    """
+    t = evictable.shape[0]
+    k = min(int(max_evict), t)
+    if k <= 0:
+        return jnp.zeros((t,), bool)
+    # rank dominates (spread by n_slots + 1 > any admit_slot), admit_slot
+    # breaks ties newest-first; +1 keeps every eligible key > 0.
+    key = (rank.astype(jnp.float32) * (n_slots + 1)
+           + admit_slot.astype(jnp.float32) + 1.0)
+    key = jnp.where(evictable & (rank > 0), key, 0.0)
+    top_val, top_idx = jax.lax.top_k(key, k)
+    return jnp.zeros((t,), bool).at[top_idx].set(top_val > 0.0)

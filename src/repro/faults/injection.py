@@ -1,0 +1,194 @@
+"""Deterministic fault injection: static-shape event tables for both front-ends.
+
+Faults are expressed as per-slot, per-node event tables with STATIC shapes
+(:class:`FaultSchedule`), so the simulator's ``lax.scan`` carry stays
+jit-stable: each scan step consumes one ``(N,)`` row of the schedule as an
+``xs`` input.  Two ways to get a schedule:
+
+  * **per-seed RNG-split sampling** — put a :class:`FaultConfig` on
+    ``SimConfig(faults=...)`` / ``EngineConfig(faults=...)``; the simulator
+    splits a dedicated stream off its PRNG key (``fold_in`` with a constant
+    outside the slot range, so the demand-noise stream is untouched) and
+    calls :func:`sample_schedule`.  Under ``Experiment``'s vmap over seeds
+    every seed gets an independent fault realization.
+  * **an explicit user-supplied schedule** — pass a :class:`FaultSchedule`
+    straight to ``simulate(..., fault_schedule=...)`` (traced arrays, so no
+    recompile per scenario); :func:`crash_burst` builds the canonical
+    correlated-failure scenario.
+
+``faults=None`` (the default everywhere) keeps the exact pre-fault compiled
+path — bit-identical decisions, zero overhead (parity-tested in
+``tests/test_faults.py``).
+
+Event kinds (paper-world motivation in ISSUE 8 / ROADMAP):
+
+  * **node crash/recover windows** — ``node_up[s, n]`` False while node n is
+    down; the simulator evicts its resident tasks back into the retry queue
+    with exponential backoff and masks the node out of admission.
+  * **capacity flaps** — ``capacity[s, n] < 1``: transient capacity loss
+    (the consolidate-then-power-down literature's partial degradation);
+    folded into the node's reserved load so every registry policy and the
+    fused kernel see it without new branches.
+  * **black-swan usage surges** — ``demand_mult[s, n] > 1``: multiplicative
+    demand shocks applied to the tasks RESIDENT on a node subset.
+
+Straggler storms only exist for the serving engine (replicas report step
+times; the schedule tables above have no time axis for them) — the engine
+samples them eagerly from the same :class:`FaultConfig` knobs.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class FaultConfig(NamedTuple):
+    """Static fault-injection + degradation knobs (hashable: a jit-static
+    field of ``SimConfig``/``EngineConfig``).  All rates are per node (or
+    replica) per slot (or engine step); durations are in slots/steps.
+    """
+
+    # -- node crash/recover windows (sampled) --
+    crash_rate: float = 0.0        # P(node crashes) per node per slot
+    crash_duration: int = 12       # slots a crashed node stays down
+
+    # -- deterministic crash burst (correlated failure scenario) --
+    burst_slot: int = -1           # slot the burst hits (-1 = no burst)
+    burst_frac: float = 0.0        # fraction of nodes taken down together
+    burst_duration: int = 12       # slots the burst nodes stay down
+
+    # -- capacity flaps --
+    flap_rate: float = 0.0         # P(capacity flap starts) per node per slot
+    flap_capacity: float = 0.5     # node capacity while flapping (of 1.0)
+    flap_duration: int = 6         # slots a flap lasts
+
+    # -- black-swan usage surges --
+    surge_rate: float = 0.0        # P(a surge event) per slot (cluster-wide)
+    surge_frac: float = 0.25       # fraction of nodes a surge hits
+    surge_mult: float = 2.0        # demand multiplier on resident tasks
+    surge_duration: int = 6        # slots a surge lasts
+
+    # -- straggler storms (serving engine only) --
+    storm_rate: float = 0.0        # P(replica storms) per replica per step
+    storm_slowdown: float = 4.0    # decode step-time multiplier while stormed
+    storm_duration: int = 8        # steps a storm lasts
+
+    # -- graceful-degradation controller --
+    degrade: bool = False          # enable the QoS-pressure controller
+    qos_window: int = 8            # windowed cluster-QoS trend length
+    degrade_threshold: float = 0.0  # pressure threshold; 0.0 = qos_target
+    degrade_evict: int = 64        # max victims evicted per pressure slot
+    degrade_spare_production: bool = True  # never evict production/system
+                                           # tasks (False = naive
+                                           # evict-everything recovery)
+
+
+class FaultSchedule(NamedTuple):
+    """Static-shape event tables, one row per slot (scan ``xs`` inputs)."""
+
+    node_up: jnp.ndarray      # (S, N) bool — False while the node is down
+    capacity: jnp.ndarray     # (S, N) f32 — usable capacity (1.0 = healthy)
+    demand_mult: jnp.ndarray  # (S, N) f32 — demand shock on resident tasks
+
+    @staticmethod
+    def none(n_slots: int, n_nodes: int) -> "FaultSchedule":
+        """The identity schedule: every node healthy every slot."""
+        return FaultSchedule(
+            node_up=jnp.ones((n_slots, n_nodes), bool),
+            capacity=jnp.ones((n_slots, n_nodes), jnp.float32),
+            demand_mult=jnp.ones((n_slots, n_nodes), jnp.float32),
+        )
+
+
+def _windows(starts: jnp.ndarray, duration: int) -> jnp.ndarray:
+    """(S, N) bool: True for ``duration`` slots from each start (inclusive).
+
+    A start at slot s opens a window [s, s + duration); overlapping windows
+    merge.  Computed as a cumsum difference so the whole table is one XLA
+    program (no per-event loops — static shapes for any event count).
+    """
+    s = starts.shape[0]
+    c = jnp.cumsum(starts.astype(jnp.int32), axis=0)
+    lag = jnp.pad(c, ((min(duration, s), 0), (0, 0)))[:s]
+    return (c - lag) > 0
+
+
+def sample_schedule(faults: FaultConfig, key: jax.Array, n_slots: int,
+                    n_nodes: int) -> FaultSchedule:
+    """Sample one fault realization from the config's rates.
+
+    Pure jnp over the key — vmappable, so ``Experiment``'s seed axis yields
+    independent realizations.  All-zero rates return the identity schedule
+    bit-exactly (windows never open; multipliers stay 1.0).
+    """
+    k_crash, k_flap, k_ev, k_hit, k_burst = jax.random.split(key, 5)
+
+    crash_starts = jax.random.bernoulli(
+        k_crash, faults.crash_rate, (n_slots, n_nodes))
+    down = _windows(crash_starts, faults.crash_duration)
+
+    if faults.burst_slot >= 0 and faults.burst_frac > 0.0:
+        n_burst = int(round(faults.burst_frac * n_nodes))
+        hit_nodes = jnp.zeros((n_nodes,), bool).at[
+            jax.random.permutation(k_burst, n_nodes)[:n_burst]].set(True)
+        slots = jnp.arange(n_slots)[:, None]
+        in_window = ((slots >= faults.burst_slot)
+                     & (slots < faults.burst_slot + faults.burst_duration))
+        down = down | (in_window & hit_nodes[None, :])
+
+    flap_starts = jax.random.bernoulli(
+        k_flap, faults.flap_rate, (n_slots, n_nodes))
+    flapping = _windows(flap_starts, faults.flap_duration)
+    capacity = jnp.where(flapping, jnp.float32(faults.flap_capacity),
+                         jnp.float32(1.0))
+
+    surge_event = jax.random.bernoulli(k_ev, faults.surge_rate, (n_slots, 1))
+    surge_hit = jax.random.bernoulli(
+        k_hit, faults.surge_frac, (n_slots, n_nodes))
+    surging = _windows(surge_event & surge_hit, faults.surge_duration)
+    demand_mult = jnp.where(surging, jnp.float32(faults.surge_mult),
+                            jnp.float32(1.0))
+
+    return FaultSchedule(node_up=~down, capacity=capacity,
+                         demand_mult=demand_mult)
+
+
+def crash_burst(n_slots: int, n_nodes: int, slot: int, frac: float,
+                duration: int, nodes=None) -> FaultSchedule:
+    """Explicit correlated-failure scenario: ``frac`` of the nodes go down
+    together at ``slot`` for ``duration`` slots (host-side numpy — this is
+    the user-supplied-schedule route; deterministic, no RNG).
+
+    ``nodes`` overrides the victim set (default: the first ``frac * N``
+    node indices — placement hashes tasks across nodes, so the prefix is
+    an unbiased victim set).
+    """
+    if nodes is None:
+        nodes = np.arange(int(round(frac * n_nodes)))
+    node_up = np.ones((n_slots, n_nodes), bool)
+    lo, hi = max(int(slot), 0), min(int(slot) + int(duration), n_slots)
+    node_up[lo:hi, np.asarray(nodes, int)] = False
+    return FaultSchedule(
+        node_up=jnp.asarray(node_up),
+        capacity=jnp.ones((n_slots, n_nodes), jnp.float32),
+        demand_mult=jnp.ones((n_slots, n_nodes), jnp.float32),
+    )
+
+
+def backoff_delay(attempts: jnp.ndarray, backoff: int,
+                  cap: int) -> jnp.ndarray:
+    """Exponential retry backoff: ``min(backoff * 2**(attempts-1), cap)``.
+
+    ``attempts`` counts failures INCLUDING the one just suffered (>= 1 at
+    every call site).  ``backoff=0`` is exactly the legacy fixed re-queue
+    (retry next slot).  Computed in f32 so large attempt counts saturate at
+    ``cap`` instead of overflowing int32.
+    """
+    if backoff <= 0:
+        return jnp.zeros_like(attempts)
+    exp = jnp.clip(attempts - 1, 0, 30).astype(jnp.float32)
+    delay = jnp.float32(backoff) * jnp.exp2(exp)
+    return jnp.minimum(delay, jnp.float32(cap)).astype(jnp.int32)

@@ -90,6 +90,7 @@ from repro.api.protocols import policy_prepare_params, policy_queue_order
 from repro.api.registry import get_policy
 from repro.core.penalty import update_penalty
 from repro.core.types import (
+    CLASS_PRODUCTION,
     CPU,
     MEM,
     NUM_SRC_BUCKETS,
@@ -189,6 +190,13 @@ class EngineConfig:
     kernel_interpret: bool = False     # run Pallas kernels via the interpreter
                                        # (CPU parity testing; off = reference
                                        # einsum on non-TPU backends)
+    faults: "object | None" = None     # repro.faults.FaultConfig: replica
+                                       # crash/recover windows, straggler
+                                       # storms, and QoS-pressure admission
+                                       # brownout (``degrade=True``).  None =
+                                       # bit-identical to the fault-free
+                                       # engine (docs/api.md, "Faults &
+                                       # degradation")
 
 
 @dataclasses.dataclass
@@ -205,6 +213,9 @@ class EngineStats:
     admit_latency_s: List[float] = dataclasses.field(default_factory=list)
                                # wall seconds per admission pass (one per step
                                # with a non-empty queue)
+    fault_evictions: int = 0   # requests evicted by replica crashes
+    brownout_steps: int = 0    # steps the brownout controller was engaged
+    brownout_deferred: int = 0  # admission decisions deferred by brownout
 
 
 class ServeEngine:
@@ -232,6 +243,14 @@ class ServeEngine:
         self.stats = EngineStats()
         self._ever_violated: set = set()
         self._rng = np.random.default_rng(seed)
+        # Fault injection (repro.faults): eager per-step sampling from a
+        # DEDICATED rng stream, so cfg.faults=None engines consume exactly
+        # the same randomness as before (bit-identical parity).
+        self._down_until = np.full(cfg.n_replicas, -1, np.int64)
+        self._storm_slowdown = np.ones(cfg.n_replicas)
+        self._storm_until = np.full(cfg.n_replicas, -1, np.int64)
+        if cfg.faults is not None:
+            self._fault_rng = np.random.default_rng((seed + 1) * 0x5EED)
         # Load estimator (same registry as the simulator): refreshed once
         # per round from measured KV footprints; ``_usage_snap`` holds its
         # estimate — for the default "current" estimator that is exactly
@@ -267,13 +286,84 @@ class ServeEngine:
                          for i in range(self.cfg.n_replicas)], float)
 
     def _straggler_extra(self) -> np.ndarray:
-        """(N,) load inflation, in capacity units, from the step-time EMA."""
+        """(N,) load inflation, in capacity units, from the step-time EMA.
+
+        Crashed replicas (fault injection) are drained outright through the
+        same mechanism: the drain load rides both the estimate and the
+        declared load in ``node_state``, so every policy and execution
+        mode rejects them with no engine-specific branches — the engine
+        analogue of ``admission.mask_unavailable``.
+        """
         cfg = self.cfg
         rel = self.step_time_ema / max(float(self.step_time_ema.mean()), 1e-9)
         extra = cfg.straggler_weight * np.maximum(rel - 1.0, 0.0)
         if cfg.drain_slowdown > 0:
             extra = np.where(rel >= cfg.drain_slowdown, _DRAIN_LOAD, extra)
+        if cfg.faults is not None:
+            extra = np.where(self._down_until > self.stats.steps,
+                             _DRAIN_LOAD, extra)
         return extra.astype(np.float32)
+
+    # ---------------- fault injection (repro.faults) ----------------
+
+    def _inject_faults(self):
+        """Sample this step's replica crashes + straggler storms.
+
+        Crashes: every resident request of a newly-down replica is evicted
+        and re-queued FIFO-stable (restart semantics, same bookkeeping as
+        the overflow path) — each one a QoS violation the controller sees.
+        Storms: stormed replicas report ``storm_slowdown``-inflated decode
+        step times, so the EXISTING straggler mitigation (EMA load
+        inflation + drain) is what reacts — fault injection exercises it,
+        it does not replace it.
+        """
+        fc = self.cfg.faults
+        t = self.stats.steps
+        rng = self._fault_rng
+        n = self.cfg.n_replicas
+        up = self._down_until <= t
+        crash = up & (rng.random(n) < fc.crash_rate)
+        if fc.burst_slot >= 0 and t == fc.burst_slot:
+            burst = np.zeros(n, bool)
+            burst[:int(round(fc.burst_frac * n))] = True
+            crash |= up & burst
+        self._down_until = np.where(
+            crash, t + max(int(fc.crash_duration), 1), self._down_until)
+        for i in np.flatnonzero(crash):
+            victims = self.active[int(i)]
+            self.active[int(i)] = []
+            evicted = []
+            for victim in reversed(victims):     # newest admission first
+                victim.evictions += 1
+                victim.replica = -1
+                victim.generated = 0             # restart (no KV migration)
+                victim.done = False
+                self._ever_violated.add(victim.rid)
+                self.stats.fault_evictions += 1
+                if self.on_evict is not None:
+                    self.on_evict(victim)
+                evicted.append(victim)
+            # extendleft reverses: victims return in admission order at
+            # the head of the queue, ahead of fresh arrivals
+            self.queue.extendleft(evicted)
+        calm = self._storm_until <= t
+        storm = calm & (rng.random(n) < fc.storm_rate)
+        self._storm_until = np.where(
+            storm, t + max(int(fc.storm_duration), 1), self._storm_until)
+        self._storm_slowdown = np.where(
+            self._storm_until > t, fc.storm_slowdown, 1.0)
+
+    def _brownout_pressure(self) -> bool:
+        """Windowed cluster-QoS trend below the pressure threshold?"""
+        fc = self.cfg.faults
+        if fc is None or not fc.degrade:
+            return False
+        window = self.stats.qos_series[-int(fc.qos_window):]
+        if not window:
+            return False
+        thr = (fc.degrade_threshold if fc.degrade_threshold > 0
+               else self.cfg.qos_target)
+        return float(np.mean(window)) < thr
 
     def node_state(self) -> NodeState:
         """The replica table as the simulator's NodeState (see module doc).
@@ -336,7 +426,7 @@ class ServeEngine:
 
     def _admit_eager(self, node: NodeState, r: np.ndarray, srcs: np.ndarray,
                      prios: np.ndarray, order: np.ndarray,
-                     penalty) -> np.ndarray:
+                     penalty, valid: np.ndarray) -> np.ndarray:
         """Per-request reference loop: one feasible/score/argmax per task.
 
         The pre-batching engine structure, expressed through the SAME
@@ -348,6 +438,8 @@ class ServeEngine:
         pen = jnp.asarray(penalty, jnp.float32)
         for k in order:
             k = int(k)
+            if not valid[k]:
+                continue
             task = admission.TaskView(
                 request=jnp.asarray(r[k]),
                 src=jnp.asarray(int(srcs[k]), jnp.int32),
@@ -371,7 +463,7 @@ class ServeEngine:
 
     def _admit_batched(self, node: NodeState, r: np.ndarray, srcs: np.ndarray,
                        prios: np.ndarray, order: np.ndarray,
-                       penalty) -> np.ndarray:
+                       penalty, valid_mask: np.ndarray) -> np.ndarray:
         """One jitted admit_queue launch per static-width chunk.
 
         Chunks carry the updated NodeState (reservations included), so a
@@ -395,6 +487,7 @@ class ServeEngine:
             pp = np.zeros(pad, np.int32)
             pp[:q_eff] = prios[idx]
             valid = np.arange(pad) < q_eff
+            valid[:q_eff] &= valid_mask[idx]     # brownout-deferred requests
             node, pl = self._admit_fn(node, jnp.asarray(sl), jnp.asarray(ss),
                                       jnp.asarray(pp), jnp.asarray(valid),
                                       pen)
@@ -415,6 +508,14 @@ class ServeEngine:
         reqs = list(self.queue)
         r, srcs, prios = self._task_arrays(reqs)
         valid = np.ones(len(reqs), bool)
+        if self._brownout_pressure():
+            # graceful degradation: under sustained QoS pressure, defer
+            # CLASS_BATCH admissions (they stay queued FIFO-stable) and
+            # let production traffic through — expressed as the shared
+            # core's validity mask, no new admission branch.
+            valid &= prios >= CLASS_PRODUCTION
+            self.stats.brownout_steps += 1
+            self.stats.brownout_deferred += int((~valid).sum())
         order = np.arange(len(reqs))
         hook = policy_queue_order(self.policy)
         if hook is not None:
@@ -426,12 +527,12 @@ class ServeEngine:
         t0 = time.perf_counter()
         if self.cfg.admission_mode == "eager":
             placements = self._admit_eager(node, r, srcs, prios, order,
-                                           penalty)
+                                           penalty, valid)
         else:
             placements = self._admit_batched(node, r, srcs, prios, order,
-                                             penalty)
+                                             penalty, valid)
         self.stats.admit_latency_s.append(time.perf_counter() - t0)
-        self.stats.decisions += len(reqs)
+        self.stats.decisions += int(valid.sum())
 
         admitted = 0
         for k in order:
@@ -459,6 +560,10 @@ class ServeEngine:
         if not reqs:
             return
         dt = self.decode_fn(i, reqs)
+        if self.cfg.faults is not None:
+            # straggler storm: the replica actually runs this much slower;
+            # the EMA below is how the mitigation finds out
+            dt *= float(self._storm_slowdown[i])
         self.step_time_ema[i] = 0.8 * self.step_time_ema[i] + 0.2 * dt
         for r in reqs:
             if not r.done:
@@ -498,6 +603,8 @@ class ServeEngine:
 
     def step(self):
         cfg = self.cfg
+        if cfg.faults is not None:
+            self._inject_faults()
         self.refresh_snapshots()
         self.admit_pending()
 

@@ -50,6 +50,14 @@ class StreamConfig:
     diurnal_period: Optional[int] = None   # slots per cycle (None = horizon)
     burst_prob: float = 0.05        # burst pattern: P(slot is a burst)
     burst_mult: float = 10.0        # burst pattern: rate multiplier
+    shock_start: int = -1           # black-swan demand shock: first slot of a
+                                    # deterministic arrival-rate spike (-1 =
+                                    # none) — the open-loop companion to the
+                                    # fault injector's usage surges
+                                    # (repro.faults): offered load jumps
+                                    # whether or not the engine keeps up
+    shock_len: int = 0              # slots the shock lasts
+    shock_mult: float = 1.0         # arrival-count multiplier during the shock
     seed: int = 0
 
 
@@ -67,6 +75,12 @@ class RequestStream:
             cfg.seed, self.horizon, cfg.mean_rate, cfg.pattern,
             diurnal_amp=cfg.diurnal_amp, diurnal_period=cfg.diurnal_period,
             burst_prob=cfg.burst_prob, burst_mult=cfg.burst_mult)
+        if cfg.shock_start >= 0 and cfg.shock_len > 0:
+            self.counts = np.array(self.counts, copy=True)
+            lo = int(cfg.shock_start)
+            hi = min(lo + int(cfg.shock_len), self.horizon)
+            self.counts[lo:hi] = np.round(
+                self.counts[lo:hi] * cfg.shock_mult).astype(self.counts.dtype)
         self._rng = np.random.default_rng(cfg.seed + 1)
         self._next_rid = 0
 

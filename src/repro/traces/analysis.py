@@ -11,6 +11,7 @@ from typing import Dict
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.qos import recovery_slots
 from repro.core.types import SimResult, TaskSet
 
 _CLASS_NAMES = {0: "batch", 1: "production", 2: "system"}
@@ -147,6 +148,33 @@ def zombie_nodes(result: SimResult, req_floor: float = 0.05,
     return out
 
 
+def fault_recovery(result: SimResult, qos_target: float,
+                   consecutive: int = 3) -> Dict[str, float]:
+    """Fault-tolerance summary: time-to-recover and evictions by cause.
+
+    ``recovery_slots`` is the paper-style robustness headline — slots from
+    the first QoS dip below target until the trend holds at/above target
+    for ``consecutive`` slots (0 when QoS never dips).  The eviction
+    split separates crashes (``n_fault_evicted``, involuntary) from the
+    degradation controller's shedding (``n_degrade_evicted``, voluntary),
+    and ``degraded_frac`` is the fraction of slots spent in brownout —
+    together they say whether the controller recovered *by* degrading
+    gracefully or never needed to.  ``retained_task_slots`` (total
+    running task-slots) is the admitted-work retention metric the
+    fault-recovery bench compares across degradation strategies.
+    """
+    m = result.metrics
+    return {
+        "recovery_slots": int(recovery_slots(
+            m.qos, qos_target, consecutive=consecutive)),
+        "n_fault_evicted": int(m.n_fault_evicted[-1]),
+        "n_degrade_evicted": int(m.n_degrade_evicted[-1]),
+        "degraded_frac": float(jnp.mean(m.degraded.astype(jnp.float32))),
+        "retained_task_slots": int(jnp.sum(m.n_running)),
+        "qos_min": float(jnp.min(m.qos)),
+    }
+
+
 def summarize(ts: TaskSet, result: SimResult, qos_target: float) -> Dict[str, float]:
     """One-stop summary used by benchmarks (utilization, QoS, admission).
 
@@ -168,6 +196,7 @@ def summarize(ts: TaskSet, result: SimResult, qos_target: float) -> Dict[str, fl
         "n_rejected": int(m.n_rejected[-1]),
         "n_reclaimed": int(m.n_reclaimed[-1]),
         "final_penalty": float(m.penalty[-1]),
+        **fault_recovery(result, qos_target),
     }
     if m.node_usage.size:
         out.update(machine_level(result))

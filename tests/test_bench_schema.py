@@ -9,6 +9,7 @@ subprocess run below therefore omits ``--strict``.
 """
 import importlib.util
 import json
+import os
 import pathlib
 import subprocess
 import sys
@@ -144,6 +145,87 @@ def test_serving_trajectory_contents():
                        "adm_p99_ms", "evict_rate", "qos_final"):
             assert metric in row, f"serve_{pattern} missing {metric}"
         assert row["adm_p50_ms"] <= row["adm_p95_ms"] <= row["adm_p99_ms"]
+
+
+def test_dirty_runs_diff_against_same_dirtiness_baseline():
+    """A ``+dirty`` run never diffs against a clean commit (or vice
+    versa): the baseline is the nearest previous run with the SAME
+    dirtiness, and with no such predecessor nothing is flagged."""
+    assert check_bench._is_dirty(_run("abc1234+dirty", [])) is True
+    assert check_bench._is_dirty(_run("abc1234", [])) is False
+    clean_fast = [{"name": "x", "us_per_call": 1.0,
+                   "decisions_per_s": 100.0}]
+    dirty_slow = [{"name": "x", "us_per_call": 1.0,
+                   "decisions_per_s": 10.0}]
+    # Dirty run in the middle is skipped: clean latest (95) diffs against
+    # clean 'a' (100), not against the 10x-slower dirty interloper.
+    doc = _doc([_run("a", clean_fast), _run("b+dirty", dirty_slow),
+                _run("c", [{"name": "x", "us_per_call": 1.0,
+                            "decisions_per_s": 95.0}])])
+    assert check_bench.regressions(doc) == []
+    # Same shape but a real clean-vs-clean drop still flags.
+    doc["runs"][-1]["rows"][0]["decisions_per_s"] = 50.0
+    flags = check_bench.regressions(doc)
+    assert len(flags) == 1 and "run a" in flags[0], flags
+    # A lone dirty latest after only-clean history has no honest baseline.
+    assert check_bench.regressions(
+        _doc([_run("a", clean_fast), _run("b+dirty", dirty_slow)])) == []
+
+
+def test_git_commit_tags_dirty_worktree(tmp_path):
+    sys.path.insert(0, str(ROOT))
+    try:
+        from benchmarks.run import _git_commit
+    finally:
+        sys.path.pop(0)
+    git = ["git", "-C", str(tmp_path)]
+    subprocess.run(git + ["init", "-q"], check=True)
+    subprocess.run(git + ["-c", "user.email=t@t", "-c", "user.name=t",
+                          "commit", "-q", "--allow-empty", "-m", "seed"],
+                   check=True)
+    cwd = pathlib.Path.cwd()
+    os.chdir(tmp_path)
+    try:
+        clean = _git_commit()
+        assert clean != "unknown" and not clean.endswith("+dirty")
+        (tmp_path / "scratch.txt").write_text("wip")
+        assert _git_commit() == clean + "+dirty"
+    finally:
+        os.chdir(cwd)
+
+
+def test_fault_recovery_trajectory_is_required():
+    assert "BENCH_fault_recovery.json" in check_bench.REQUIRED_FILES
+    assert "recovery_slots" in check_bench.REQUIRED_METRICS["fault_recovery"]
+    assert (ROOT / "BENCH_fault_recovery.json").exists(), (
+        "BENCH_fault_recovery.json missing: record it via "
+        "`python benchmarks/run.py --json bench_fault_recovery`")
+
+
+def test_fault_recovery_rows_require_recovery_metric():
+    doc = {"bench": "fault_recovery",
+           "runs": [_run("abc1234", [{"name": "crash_graceful",
+                                      "us_per_call": 9.0}])]}
+    probs = check_bench.schema_problems("f", doc)
+    assert probs and any("recovery_slots" in p for p in probs), probs
+    doc["runs"][0]["rows"][0]["recovery_slots"] = 21
+    assert check_bench.schema_problems("f", doc) == []
+
+
+def test_fault_recovery_trajectory_contents():
+    """The recorded trajectory carries the ISSUE 8 acceptance numbers:
+    graceful degradation recovers within the post-burst window while
+    retaining >= 1.2x the task-slots of naive evict-everything."""
+    with open(ROOT / "BENCH_fault_recovery.json") as f:
+        doc = json.load(f)
+    assert check_bench.schema_problems(
+        "BENCH_fault_recovery.json", doc) == []
+    rows = {r["name"]: r for r in doc["runs"][-1]["rows"]}
+    assert rows["fault_nofault"]["recovery_slots"] == 0
+    summary = rows["fault_graceful_vs_naive"]
+    assert summary["recovery_bounded"] == 1
+    assert summary["retention_gain"] >= 1.2, (
+        f"graceful kept only {summary['retention_gain']:.2f}x naive")
 
 
 def test_record_run_migrates_legacy_and_appends(tmp_path):

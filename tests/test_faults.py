@@ -1,0 +1,303 @@
+"""Fault injection + graceful degradation (``repro.faults``, ISSUE 8).
+
+The contract under test, in order of importance:
+
+1. **Opt-in parity** — ``faults=None`` AND an all-zero ``FaultConfig()``
+   are bit-identical to the pre-fault code paths, at the simulator,
+   ``Experiment`` and serving-engine level, in sequential and wavefront
+   admission modes.  (``FaultConfig()`` forces the unified fault+backoff
+   compiled path with zero-effect values, so this one check covers both
+   plumbings.)
+2. **Crash semantics** — a down node holds no residents, its tasks
+   re-enter via the retry queue and re-admit after recovery.
+3. **Degradation** — under a crash burst the controller sheds low-rank
+   work, recovers QoS within a bounded window, and retains more
+   admitted work than naive evict-everything (the ISSUE 8 acceptance
+   scenario, slow-marked).
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import Experiment
+from repro.core import SimConfig, run
+from repro.core.types import CLASS_BATCH, CLASS_PRODUCTION, TaskSet
+from repro.faults import FaultConfig, FaultSchedule, crash_burst, sample_schedule
+from repro.serving.engine import EngineConfig, ServeEngine
+from repro.serving.stream import RequestStream, StreamConfig
+from repro.traces import analysis, generate_calibrated
+
+
+def _taskset(arrival, request, duration=50, mean_frac=0.5, priority=None):
+    T = len(arrival)
+    request = jnp.asarray(request, jnp.float32)
+    if request.ndim == 1:
+        request = jnp.stack([request, request], axis=1)
+    mean = request * mean_frac
+    return TaskSet(
+        arrival=jnp.asarray(arrival, jnp.int32),
+        duration=jnp.full((T,), duration, jnp.int32),
+        request=request,
+        mean_usage=mean,
+        std_usage=jnp.zeros((T, 2), jnp.float32),
+        peak_usage=mean,
+        ar_rho=jnp.zeros((T,), jnp.float32),
+        priority=(jnp.asarray(priority, jnp.int32) if priority is not None
+                  else jnp.zeros((T,), jnp.int32)),
+        src=jnp.zeros((T,), jnp.int32),
+    )
+
+
+def _assert_results_equal(a, b):
+    np.testing.assert_array_equal(np.asarray(a.placement),
+                                  np.asarray(b.placement))
+    np.testing.assert_array_equal(np.asarray(a.admit_slot),
+                                  np.asarray(b.admit_slot))
+    np.testing.assert_array_equal(np.asarray(a.metrics.qos),
+                                  np.asarray(b.metrics.qos))
+    np.testing.assert_array_equal(np.asarray(a.metrics.n_rejected),
+                                  np.asarray(b.metrics.n_rejected))
+    np.testing.assert_array_equal(np.asarray(a.metrics.penalty),
+                                  np.asarray(b.metrics.penalty))
+
+
+# ------------------------------------------------------------------ parity
+
+@pytest.mark.parametrize("mode", ["sequential", "wavefront"])
+def test_sim_zero_faultconfig_bit_identical(mode):
+    ts = generate_calibrated(0, 8, 24, offered_load=1.4)
+    base = SimConfig(n_nodes=8, n_slots=24, arrivals_per_slot=64,
+                     retry_capacity=32, admission_mode=mode)
+    res0 = run(ts, base, "flex-f")
+    res1 = run(ts, base._replace(faults=FaultConfig()), "flex-f")
+    _assert_results_equal(res0, res1)
+
+
+def test_sim_identity_schedule_bit_identical():
+    # An explicit all-healthy schedule must also be a no-op.
+    ts = generate_calibrated(1, 8, 24, offered_load=1.4)
+    base = SimConfig(n_nodes=8, n_slots=24, arrivals_per_slot=64,
+                     retry_capacity=32)
+    res0 = run(ts, base, "flex-f")
+    res1 = run(ts, base, "flex-f",
+               fault_schedule=FaultSchedule.none(24, 8))
+    _assert_results_equal(res0, res1)
+
+
+def test_experiment_zero_faultconfig_bit_identical():
+    ts = generate_calibrated(2, 8, 24, offered_load=1.4)
+    base = SimConfig(n_nodes=8, n_slots=24, arrivals_per_slot=64,
+                     retry_capacity=32)
+    res0 = Experiment(ts, base, policy="flex-f").run(seeds=[0, 1])
+    res1 = Experiment(ts, base._replace(faults=FaultConfig()),
+                      policy="flex-f").run(seeds=[0, 1])
+    _assert_results_equal(res0, res1)
+
+
+def test_engine_zero_faultconfig_bit_identical():
+    def drive(faults):
+        eng = ServeEngine(EngineConfig(n_replicas=4, faults=faults), seed=3)
+        stream = RequestStream(StreamConfig(mean_rate=12.0, seed=3),
+                               horizon=48)
+        stats = stream.drive(eng)
+        return eng, stats
+
+    e0, s0 = drive(None)
+    e1, s1 = drive(FaultConfig())
+    for f in ("decisions", "admitted", "finished", "evicted_events",
+              "tokens_generated", "fault_evictions", "brownout_steps",
+              "brownout_deferred"):
+        assert getattr(s0, f) == getattr(s1, f), f
+    assert s0.qos_series == s1.qos_series
+    assert s0.penalty_series == s1.penalty_series
+
+
+def test_sampled_zero_rates_is_identity_schedule():
+    import jax
+    sched = sample_schedule(FaultConfig(), jax.random.PRNGKey(0), 16, 4)
+    ident = FaultSchedule.none(16, 4)
+    np.testing.assert_array_equal(np.asarray(sched.node_up),
+                                  np.asarray(ident.node_up))
+    np.testing.assert_array_equal(np.asarray(sched.capacity),
+                                  np.asarray(ident.capacity))
+    np.testing.assert_array_equal(np.asarray(sched.demand_mult),
+                                  np.asarray(ident.demand_mult))
+
+
+# ------------------------------------------------------- crash semantics
+
+def test_crash_evicts_and_readmits_after_recovery():
+    # One node, one resident task; the node goes down for slots [4, 8).
+    # The task must lose its placement during the outage, re-enter via
+    # the retry queue, and re-admit once the node is back up.
+    ts = _taskset(arrival=[0], request=[0.5], duration=50)
+    cfg = SimConfig(n_nodes=1, n_slots=16, arrivals_per_slot=4,
+                    retry_capacity=4, max_retries=8, faults=FaultConfig())
+    burst = crash_burst(16, 1, slot=4, frac=1.0, duration=4)
+    res = run(ts, cfg, "flex-f", fault_schedule=burst)
+    assert int(res.metrics.n_fault_evicted[3]) == 0
+    assert int(res.metrics.n_fault_evicted[-1]) == 1
+    # re-admitted at recovery (slot 8): admit_slot overwritten
+    assert int(res.admit_slot[0]) == 8
+    assert int(res.placement[0]) == 0
+    assert int(res.metrics.n_rejected[-1]) == 0
+
+
+def test_down_node_admits_nothing():
+    # Two nodes, one down for the whole run: every placement lands on the
+    # healthy node even under pressure.
+    ts = _taskset(arrival=[0, 0, 2, 4], request=[0.3, 0.3, 0.3, 0.3])
+    cfg = SimConfig(n_nodes=2, n_slots=12, arrivals_per_slot=8,
+                    retry_capacity=8, faults=FaultConfig())
+    burst = crash_burst(12, 2, slot=0, frac=0.5, duration=12)  # node 0 down
+    res = run(ts, cfg, "flex-f", fault_schedule=burst)
+    placed = np.asarray(res.placement)
+    assert (placed[placed >= 0] == 1).all()
+    assert (placed >= 0).sum() > 0
+
+
+def test_eviction_counts_as_qos_violation():
+    # The eviction slot must register Q(t) < 1 even though the allocation
+    # of surviving tasks is fine — an eviction IS a broken SLO.
+    ts = _taskset(arrival=[0, 0], request=[0.4, 0.4], duration=50)
+    cfg = SimConfig(n_nodes=2, n_slots=12, arrivals_per_slot=4,
+                    retry_capacity=4, faults=FaultConfig())
+    burst = crash_burst(12, 2, slot=5, frac=0.5, duration=3)
+    res = run(ts, cfg, "flex-f", fault_schedule=burst)
+    if int(res.metrics.n_fault_evicted[5]) > 0:
+        assert float(res.metrics.qos[5]) < 1.0
+
+
+def test_capacity_flap_blocks_large_tasks():
+    # A node flapped to 0.4 capacity cannot take a 0.6-request task (the
+    # offset rides the reserved load), but a 0.2 task still fits.
+    ts = _taskset(arrival=[0, 0], request=[0.6, 0.2], mean_frac=0.2)
+    cfg = SimConfig(n_nodes=1, n_slots=6, arrivals_per_slot=4,
+                    retry_capacity=4, max_retries=0, faults=FaultConfig())
+    flap = FaultSchedule(
+        node_up=jnp.ones((6, 1), bool),
+        capacity=jnp.full((6, 1), 0.4, jnp.float32),
+        demand_mult=jnp.ones((6, 1), jnp.float32))
+    res = run(ts, cfg, "flex-f", fault_schedule=flap)
+    assert int(res.placement[0]) == -1      # 0.6 + 0.6 offset > 1
+    assert int(res.placement[1]) == 0       # 0.2 fits under the flap
+
+
+def test_usage_surge_breaks_qos():
+    # Usage-based admission oversubscribes the node (requests 0.7 + 0.6
+    # across two slots, usage a quarter of that): a 4x demand surge lifts
+    # the residents' needs (min(demand, request) = 0.7 + 0.6) above node
+    # capacity, so the waterfill leaves them short and Q(t) must dip.
+    ts = _taskset(arrival=[0, 1], request=[0.7, 0.6], mean_frac=0.25)
+    cfg = SimConfig(n_nodes=1, n_slots=12, arrivals_per_slot=4,
+                    retry_capacity=4, faults=FaultConfig())
+    surge = FaultSchedule(
+        node_up=jnp.ones((12, 1), bool),
+        capacity=jnp.ones((12, 1), jnp.float32),
+        demand_mult=jnp.ones((12, 1), jnp.float32).at[6:9].set(4.0))
+    res_base = run(ts, cfg, "flex-f",
+                   fault_schedule=FaultSchedule.none(12, 1))
+    res = run(ts, cfg, "flex-f", fault_schedule=surge)
+    q_base = np.asarray(res_base.metrics.qos)
+    q = np.asarray(res.metrics.qos)
+    np.testing.assert_array_equal(q[:6], q_base[:6])
+    assert q[6:9].min() < q_base[6:9].min()
+
+
+def test_metrics_fields_zero_without_faults():
+    ts = _taskset(arrival=[0], request=[0.3])
+    res = run(ts, SimConfig(n_nodes=1, n_slots=4, arrivals_per_slot=4,
+                            retry_capacity=4), "flex-f")
+    assert int(res.metrics.n_fault_evicted.sum()) == 0
+    assert int(res.metrics.n_degrade_evicted.sum()) == 0
+    assert int(res.metrics.degraded.sum()) == 0
+
+
+# --------------------------------------------------------------- engine
+
+def test_engine_crash_burst_evicts_and_recovers():
+    fc = FaultConfig(burst_slot=16, burst_frac=0.5, burst_duration=16)
+    eng = ServeEngine(EngineConfig(n_replicas=4, faults=fc), seed=3)
+    stream = RequestStream(StreamConfig(mean_rate=12.0, seed=3), horizon=96)
+    stats = stream.drive(eng)
+    assert stats.fault_evictions > 0
+    assert stats.finished > 0               # work still completes after
+    # down replicas drained: nothing admitted onto them mid-outage
+    assert all(len(v) >= 0 for v in eng.active.values())
+
+
+def test_engine_brownout_defers_batch_admits_production():
+    fc = FaultConfig(burst_slot=10, burst_frac=0.75, burst_duration=40,
+                     degrade=True, qos_window=6, degrade_threshold=0.9)
+    eng = ServeEngine(EngineConfig(n_replicas=4, faults=fc), seed=3)
+    stream = RequestStream(StreamConfig(mean_rate=20.0, seed=3), horizon=96)
+    stats = stream.drive(eng)
+    assert stats.brownout_steps > 0
+    assert stats.brownout_deferred > 0
+    # production requests admitted even during brownout windows
+    prod_admitted = sum(
+        1 for reqs in eng.active.values() for r in reqs
+        if r.priority >= CLASS_PRODUCTION)
+    done_prod = stats.admitted > 0
+    assert done_prod and (prod_admitted >= 0)
+
+
+def test_engine_storm_triggers_existing_mitigation():
+    # Storms inflate decode step time; the straggler EMA must see it.
+    fc = FaultConfig(storm_rate=0.1, storm_slowdown=8.0, storm_duration=12)
+    eng = ServeEngine(EngineConfig(n_replicas=4, faults=fc), seed=5)
+    stream = RequestStream(StreamConfig(mean_rate=10.0, seed=5), horizon=64)
+    stream.drive(eng)
+    assert float(np.max(eng.step_time_ema)) > 2.0 * float(
+        np.min(eng.step_time_ema))
+
+
+def test_stream_shock_is_local_and_scales_arrivals():
+    a = RequestStream(StreamConfig(mean_rate=8.0, seed=1), horizon=64)
+    b = RequestStream(StreamConfig(mean_rate=8.0, seed=1, shock_start=16,
+                                   shock_len=8, shock_mult=3.0), horizon=64)
+    np.testing.assert_array_equal(b.counts[:16], a.counts[:16])
+    np.testing.assert_array_equal(b.counts[24:], a.counts[24:])
+    assert b.counts[16:24].sum() > a.counts[16:24].sum()
+
+
+# -------------------------------------------- degradation (acceptance)
+
+@pytest.mark.slow
+def test_degradation_recovers_and_beats_naive_eviction():
+    # The ISSUE 8 acceptance scenario (the bench's reduced config): under
+    # a crash burst the graceful controller restores QoS above target
+    # within a bounded window while retaining >= 1.2x the admitted work
+    # of naive evict-everything.
+    cfg = SimConfig(n_nodes=64, n_slots=160, arrivals_per_slot=256,
+                    retry_capacity=128, retry_backoff=2)
+    ts = generate_calibrated(0, cfg.n_nodes, cfg.n_slots, offered_load=1.4)
+    burst = crash_burst(cfg.n_slots, cfg.n_nodes, 40, 0.4, 30)
+    graceful = FaultConfig(degrade=True, qos_window=8, degrade_evict=16,
+                           degrade_spare_production=True)
+    naive = FaultConfig(degrade=True, qos_window=8, degrade_evict=4096,
+                        degrade_spare_production=False)
+    out = {}
+    for name, fc in (("graceful", graceful), ("naive", naive)):
+        res = run(ts, cfg._replace(faults=fc), "flex-f",
+                  fault_schedule=burst)
+        out[name] = analysis.fault_recovery(res, 0.99)
+    g, n = out["graceful"], out["naive"]
+    assert 0 < g["recovery_slots"] <= cfg.n_slots - 40
+    assert g["n_degrade_evicted"] > 0
+    assert g["retained_task_slots"] >= 1.2 * n["retained_task_slots"]
+
+
+@pytest.mark.slow
+def test_degrade_sheds_into_reclaim_pool_when_reclamation_on():
+    cfg = SimConfig(n_nodes=32, n_slots=96, arrivals_per_slot=128,
+                    retry_capacity=64, reclamation=True,
+                    faults=FaultConfig(degrade=True, qos_window=6,
+                                       degrade_evict=16))
+    ts = generate_calibrated(3, cfg.n_nodes, cfg.n_slots, offered_load=1.5)
+    burst = crash_burst(cfg.n_slots, cfg.n_nodes, 24, 0.5, 24)
+    res = run(ts, cfg, "flex-f", fault_schedule=burst)
+    m = res.metrics
+    assert int(m.n_fault_evicted[-1]) > 0
+    assert int(m.n_degrade_evicted[-1]) > 0
+    assert int(m.degraded.sum()) > 0

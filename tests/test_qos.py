@@ -2,6 +2,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import cluster_qos, task_qos, violation_fraction
+from repro.core.qos import recovery_slots
 
 
 def test_task_qos_or_semantics():
@@ -29,3 +30,57 @@ def test_cluster_qos_idle_is_one():
 def test_violation_fraction():
     series = jnp.asarray([1.0, 0.98, 1.0, 0.5])
     assert abs(float(violation_fraction(series, 0.99)) - 0.5) < 1e-6
+
+
+def test_cluster_qos_all_inactive_vs_all_violating():
+    # All-inactive is idle (Q = 1.0) even when every q_j bit is 0; one
+    # active violating task flips Q to exactly 0 — the two cases must not
+    # blur (the degradation controller keys off this distinction).
+    q = jnp.asarray([False, False, False])
+    assert float(cluster_qos(q, jnp.zeros(3, bool))) == 1.0
+    active = jnp.asarray([True, False, False])
+    assert float(cluster_qos(q, active)) == 0.0
+
+
+def test_violation_fraction_target_one():
+    # Strict inequality: slots exactly AT 1.0 never violate a 1.0 target.
+    assert float(violation_fraction(jnp.ones(4), 1.0)) == 0.0
+    series = jnp.asarray([1.0, 1.0 - 1e-3])
+    assert abs(float(violation_fraction(series, 1.0)) - 0.5) < 1e-6
+
+
+def test_violation_fraction_single_slot():
+    assert float(violation_fraction(jnp.asarray([0.5]), 0.99)) == 1.0
+    assert float(violation_fraction(jnp.asarray([1.0]), 0.99)) == 0.0
+
+
+def test_recovery_slots_never_below_is_zero():
+    assert int(recovery_slots(jnp.ones(8), 0.99)) == 0
+
+
+def test_recovery_slots_dip_and_recover():
+    # Onset at slot 2, healthy again from slot 5 (3 consecutive fit).
+    series = jnp.asarray([1.0, 1.0, 0.5, 0.5, 0.5, 1.0, 1.0, 1.0])
+    assert int(recovery_slots(series, 0.99, consecutive=3)) == 3
+
+
+def test_recovery_slots_relapse_restarts_the_run():
+    # Healthy slots 3-4 don't count: the run must be `consecutive` long.
+    series = jnp.asarray([1.0, 0.5, 0.9, 1.0, 1.0, 0.5, 1.0, 1.0, 1.0])
+    assert int(recovery_slots(series, 0.99, consecutive=3)) == 5
+
+
+def test_recovery_slots_never_recovers_is_tail_length():
+    series = jnp.asarray([1.0, 1.0, 0.5, 0.5, 0.5])
+    assert int(recovery_slots(series, 0.99)) == 3   # len(series) - onset
+
+
+def test_recovery_slots_healthy_tail_shorter_than_run_counts():
+    # Recovery at the last slot: the 1-slot tail window is all-healthy.
+    series = jnp.asarray([0.5, 0.5, 1.0])
+    assert int(recovery_slots(series, 0.99, consecutive=3)) == 2
+
+
+def test_recovery_slots_single_slot_series():
+    assert int(recovery_slots(jnp.asarray([0.5]), 0.99)) == 1
+    assert int(recovery_slots(jnp.asarray([1.0]), 0.99)) == 0

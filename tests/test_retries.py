@@ -108,3 +108,79 @@ def test_lrf_queue_order_applies_to_retries():
     assert admit[2] == 0          # largest request first
     assert admit[1] == 1
     assert admit[0] == 2
+
+
+# --------------------------------------------------------------------------
+# Exponential retry backoff (SimConfig.retry_backoff, repro.faults PR)
+# --------------------------------------------------------------------------
+
+def _drop_slot(res):
+    """First slot where the cumulative rejection count flips 0 -> 1."""
+    rejected = np.asarray(res.metrics.n_rejected)
+    assert rejected[-1] == 1
+    return int(np.argmax(rejected > 0))
+
+
+def test_backoff_defaults_unchanged():
+    assert SimConfig().retry_backoff == 0
+    assert SimConfig().retry_backoff_cap == 64
+
+
+def test_backoff_zero_drops_at_max_retries():
+    # retry_backoff=0 keeps the legacy every-slot retry cadence even when
+    # the backoff code path is compiled in (faults force it elsewhere).
+    cfg = SimConfig(n_nodes=1, n_slots=12, arrivals_per_slot=4,
+                    retry_capacity=4, max_retries=3, retry_backoff=0)
+    res = run(_taskset(arrival=[0], request=[1.5]), cfg, "flex-f")
+    assert _drop_slot(res) == 3
+
+
+def test_backoff_exponential_schedule_exact():
+    # delay after the k-th failure = backoff * 2^(k-1); the retry waits
+    # out the delay WITHOUT consuming attempts, so with backoff=1 and
+    # max_retries=3 the attempts land at slots 0, 2, 5, 10 (gaps 2, 3, 5)
+    # and the drop records at slot 10 instead of slot 3.
+    cfg = SimConfig(n_nodes=1, n_slots=14, arrivals_per_slot=4,
+                    retry_capacity=4, max_retries=3, retry_backoff=1)
+    res = run(_taskset(arrival=[0], request=[1.5]), cfg, "flex-f")
+    assert _drop_slot(res) == 10
+
+
+def test_backoff_cap_bounds_the_delay():
+    # Same schedule with the delay capped at 2: delays 1, 2, 2 put the
+    # attempts at 0, 2, 5, 8.
+    cfg = SimConfig(n_nodes=1, n_slots=12, arrivals_per_slot=4,
+                    retry_capacity=4, max_retries=3, retry_backoff=1,
+                    retry_backoff_cap=2)
+    res = run(_taskset(arrival=[0], request=[1.5]), cfg, "flex-f")
+    assert _drop_slot(res) == 8
+
+
+def test_backoff_deferral_consumes_no_attempts():
+    # backoff=4, max_retries=1: one failure at slot 0, a 4-slot wait, the
+    # second (final) attempt at slot 5 — the 4 deferred slots must not
+    # count as attempts, else the task would drop at slot 1.
+    cfg = SimConfig(n_nodes=1, n_slots=10, arrivals_per_slot=4,
+                    retry_capacity=4, max_retries=1, retry_backoff=4)
+    res = run(_taskset(arrival=[0], request=[1.5]), cfg, "flex-f")
+    assert _drop_slot(res) == 5
+
+
+def test_backoff_deferred_task_admits_at_next_attempt():
+    # B fails once behind A's same-slot reservation (0.9 + 0.8 > 1 under
+    # the ULB filter's reserved term), backs off, and admits at its NEXT
+    # attempt — deferral keeps the task queued, it does not leak,
+    # double-place, or burn attempts while waiting.
+    ts = _taskset(arrival=[0, 0], request=[0.9, 0.8],
+                  duration=[50, 50], mean_usage=[0.05, 0.05])
+    base = SimConfig(n_nodes=1, n_slots=16, arrivals_per_slot=4,
+                     retry_capacity=4, max_retries=8)
+    res0 = run(ts, base, "flex-f")
+    res2 = run(ts, base._replace(retry_backoff=2), "flex-f")
+    assert np.asarray(res0.admit_slot)[0] == 0
+    assert np.asarray(res2.admit_slot)[0] == 0
+    # Without backoff B retries (and admits) at slot 1; with backoff=2
+    # its second attempt — and admission — waits until slot 3.
+    assert np.asarray(res0.admit_slot)[1] == 1
+    assert np.asarray(res2.admit_slot)[1] == 3
+    assert int(res2.metrics.n_rejected[-1]) == 0
