@@ -12,6 +12,9 @@ perf trajectory across PRs survives in-repo and
 predecessor.  Legacy bare-list files (pre-trajectory format) are wrapped
 into the first run on first touch.
 
+``--only <name>`` restricts the run to one bench (repeatable; the
+``bench_`` prefix is optional): ``python benchmarks/run.py --json --only
+fault_recovery``.  Bare positional names keep working as a legacy filter:
 ``python benchmarks/run.py --json bench_scheduler_throughput``.
 """
 from __future__ import annotations
@@ -102,7 +105,28 @@ def main() -> None:
     full = os.environ.get("REPRO_FULL", "0") == "1"
     args = sys.argv[1:]
     write_json = "--json" in args
-    only = [a for a in args if a != "--json"] or None
+    args = [a for a in args if a != "--json"]
+    only = []
+    i = 0
+    while i < len(args):
+        a = args[i]
+        if a == "--only":
+            if i + 1 >= len(args):
+                raise SystemExit("run.py: --only requires a bench name")
+            only.append(args[i + 1])
+            i += 2
+        elif a.startswith("--only="):
+            only.append(a.split("=", 1)[1])
+            i += 1
+        else:
+            only.append(a)          # legacy positional filter
+            i += 1
+    only = [o if o.startswith("bench_") else f"bench_{o}" for o in only]
+    unknown = [o for o in only if o not in BENCHES]
+    if unknown:
+        raise SystemExit(
+            f"run.py: unknown bench(es) {unknown}; known: {BENCHES}")
+    only = only or None
     commit = _git_commit()
     timestamp = datetime.datetime.now(datetime.timezone.utc).isoformat()
     print("name,us_per_call,derived")

@@ -46,6 +46,19 @@ REQUIRED_METRICS = {
     "fault_recovery": ("recovery_slots",),
 }
 
+# Rows the LATEST run of a bench must contain, with the metrics each must
+# carry.  Only the newest run is held to this — older runs predate the
+# feature and stay diffable.  The migrate variants are the live-migration
+# acceptance record (ISSUE 9): losing them would silently drop the
+# retention/recovery guard.
+REQUIRED_ROWS = {
+    "fault_recovery": {
+        "fault_crash_migrate": ("recovery_slots", "retained_task_slots"),
+        "fault_migrate_vs_graceful": (
+            "recovery_slots", "retained_task_slots", "retention_gain"),
+    },
+}
+
 
 def schema_problems(path: str, doc) -> list:
     """Return human-readable schema violations for one trajectory doc."""
@@ -105,6 +118,24 @@ def schema_problems(path: str, doc) -> list:
                 if not isinstance(row.get(met), numbers.Real):
                     out.append(f"{rwhere}: bench {doc.get('bench')!r} "
                                f"requires numeric metric {met!r}")
+    req_rows = REQUIRED_ROWS.get(doc.get("bench"), {})
+    last = runs[-1]
+    last_rows = last.get("rows") if isinstance(last, dict) else None
+    if req_rows and isinstance(last_rows, list):
+        by_name = {row.get("name"): row for row in last_rows
+                   if isinstance(row, dict)}
+        for rname, mets in req_rows.items():
+            row = by_name.get(rname)
+            if row is None:
+                out.append(
+                    f"{path}: latest run is missing required row {rname!r} "
+                    f"(bench {doc.get('bench')!r}; re-record via "
+                    f"benchmarks/run.py --json)")
+                continue
+            for met in mets:
+                if not isinstance(row.get(met), numbers.Real):
+                    out.append(f"{path}: latest run row {rname!r} requires "
+                               f"numeric metric {met!r}")
     return out
 
 

@@ -30,6 +30,10 @@ Fails (exit 1 / non-empty problem list) when:
     ``FaultConfig`` knob is undocumented there, or ``docs/kernels.md``
     stops mentioning that fault eviction rides the shared admission
     path (``mask_unavailable`` load offsets);
+  * ``docs/api.md`` lost its "Migration" section, a ``MigrationConfig``
+    knob is undocumented there, or ``docs/kernels.md`` lost the
+    "Source-exclusion cap" note (why the migrate pass excludes source
+    nodes via node-side reserved offsets);
   * a cross-linked docs file (``docs/kernels.md``) has gone missing.
 
 Run standalone (``python scripts/check_docs.py``) or through the tier-1
@@ -126,7 +130,7 @@ def problems() -> list:
     for knob in ("wavefront_topk", "dedup_buckets", "wavefront_tie_margin",
                  "estimator", "reclamation", "reclaim_margin",
                  "reclaim_pool", "retry_backoff", "retry_backoff_cap",
-                 "faults"):
+                 "faults", "migration"):
         if knob in SimConfig._fields and f"`{knob}`" not in api_md:
             out.append(
                 f"SimConfig field {knob!r} is not documented in docs/api.md")
@@ -149,6 +153,26 @@ def problems() -> list:
         out.append(
             "docs/kernels.md does not mention that fault eviction reuses "
             "the shared admission path (mask_unavailable load offsets)")
+
+    # Live migration: every MigrationConfig knob must appear in the
+    # "Migration" section of docs/api.md, and docs/kernels.md must keep
+    # the "Source-exclusion cap" note — it documents WHY per-task source
+    # exclusion rides a node-side reserved offset (the wavefront/dedup
+    # invariants a straight per-task node plane would break).
+    from repro.migration import MigrationConfig
+    if "## Migration" not in api_md:
+        out.append("docs/api.md has no '## Migration' section but "
+                   "repro.migration exposes the live-migration API")
+    for knob in MigrationConfig._fields:
+        if f"`{knob}`" not in api_md:
+            out.append(
+                f"MigrationConfig knob {knob!r} is not documented in "
+                f"docs/api.md")
+    if kernels_md and "Source-exclusion cap" not in kernels_md:
+        out.append(
+            "docs/kernels.md lost its 'Source-exclusion cap' note (how "
+            "the migrate pass excludes source nodes through node-side "
+            "DRAIN_LOAD reserved offsets, wavefront/dedup sound)")
 
     # Serving engine: every EngineConfig knob must be documented in the
     # "Serving" section of docs/api.md (the knob set grew with the

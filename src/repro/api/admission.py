@@ -30,6 +30,13 @@ from repro.core.types import FlexParams, NodeState
 
 NEG_INF = -1e30
 
+# Effective load pinned onto drained/unavailable nodes (down, flapped-out,
+# draining ahead of a fault, or a migration source): far above any capacity
+# or oversubscription factor, so the capacity filter of EVERY load model
+# rejects every candidate.  The single shared sentinel — the serving engine
+# and the fault/migration offsets all import it from here.
+DRAIN_LOAD = 1e6
+
 
 def _xp(x):
     """numpy for eager numpy inputs, jax.numpy otherwise."""
@@ -50,13 +57,14 @@ def usage_load(est_usage, reserved, penalty):
     return penalty * est_usage + reserved
 
 
-def fault_load_offset(node_up, capacity, drain_load=1e6):
+def fault_load_offset(node_up, capacity, drain_load=DRAIN_LOAD):
     """(N,) load offset expressing node faults to EVERY admission policy.
 
-    Down nodes get ``drain_load`` (far above any capacity or theta, so
-    both load models reject every candidate); capacity-flapped nodes get
-    the lost fraction ``1 - capacity``.  Healthy nodes get exactly 0.0, so
-    the identity schedule is bit-identical to no faults.
+    Down nodes get ``drain_load`` (``DRAIN_LOAD`` — far above any capacity
+    or theta, so both load models reject every candidate);
+    capacity-flapped nodes get the lost fraction ``1 - capacity``.
+    Healthy nodes get exactly 0.0, so the identity schedule is
+    bit-identical to no faults.
     """
     xp = _xp(capacity)
     return xp.where(node_up, 1.0 - capacity, drain_load).astype(capacity.dtype)

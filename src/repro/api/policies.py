@@ -243,6 +243,46 @@ class ReclaimPolicy(FlexFifoPolicy):
             cap=self._cap(ctx).astype(jnp.float32))
 
 
+@register_policy("migrate")
+@dataclasses.dataclass(frozen=True)
+class MigratePolicy(FlexFifoPolicy):
+    """Live-migration target selection: re-place a RESIDENT task off a
+    draining/overloaded node (``repro.migration``, ISSUE 9).
+
+    Target scoring is inherited from FlexF (least-loaded + same-source
+    spreading — a migrating task should land where a fresh admission
+    would), with an optional penalty-derived safety cap
+    ``1 - margin_scale * P`` riding the kernel template's ``cap`` scalar
+    exactly like the reclaim pass: under QoS pressure the migration pass
+    targets conservatively, with a trusted estimator it may fill nodes.
+
+    **Source exclusion** needs no per-task node plane: every migration
+    source in a pass is a draining (or overloaded) node, and the pass
+    folds ``admission.DRAIN_LOAD`` into those nodes' ``reserved`` rows
+    (``admission.mask_unavailable`` — the same offset mechanism as fault
+    masking) before admitting.  The kernel cap filter
+    ``all_R(P * est + reserved + r <= cap)`` then rejects every source for
+    every task, because any finite cap sits far below ``DRAIN_LOAD``.
+    The offset is node-side and admission-invariant within the pass, so
+    all wavefront/dedup soundness invariants carry over unchanged
+    (docs/kernels.md, "Source-exclusion cap").
+    """
+
+    name = "migrate"
+    margin_scale: float = 0.0
+
+    def _cap(self, ctx: PolicyContext) -> jnp.ndarray:
+        return jnp.maximum(1.0 - self.margin_scale * ctx.penalty, 0.0)
+
+    def feasible(self, ctx: PolicyContext, task: TaskView) -> jnp.ndarray:
+        return admission.fits(self._load(ctx), task.request, self._cap(ctx))
+
+    def kernel_inputs(self, ctx: PolicyContext,
+                      task: TaskView) -> admission.KernelInputs:
+        return super().kernel_inputs(ctx, task)._replace(
+            cap=self._cap(ctx).astype(jnp.float32))
+
+
 @register_policy("flex-brownout")
 @dataclasses.dataclass(frozen=True)
 class BrownoutPolicy(FlexFifoPolicy):

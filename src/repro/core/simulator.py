@@ -29,6 +29,13 @@ Per-slot pipeline (semantics match Kubernetes + Alg. 3):
   5. refresh the load estimator, clear reservations; crashed/flapped nodes
      fold their lost capacity into ``reserved``
      (``admission.mask_unavailable``) so every policy avoids them
+  5.5 with ``SimConfig(migration=...)``: live migration — tasks resident
+     on draining (``FaultSchedule.draining`` advance warning) or
+     overloaded nodes re-place onto healthy nodes through the SAME
+     ``admit_queue`` path (the registered ``migrate`` policy), bounded by
+     a per-slot bandwidth budget and an in-flight pool; successes keep
+     their progress at ``migrate_cost`` extra slots of runtime, pool
+     overflow falls back to the evict-to-retry path
   6. order the queue via the policy's queue_order hook (FIFO when absent)
      and admit retries + this slot's arrivals sequentially; tasks inside
      their backoff window (``SimConfig.retry_backoff``) stay queued
@@ -121,10 +128,16 @@ def build_arrival_table(arrival: np.ndarray, n_slots: int,
     return table
 
 
-def _node_aggregates(ts: TaskSet, placement, admit_slot, slot, n_nodes):
-    """Recompute per-node request/count/src aggregates for the active set."""
+def _node_aggregates(ts: TaskSet, placement, admit_slot, slot, n_nodes,
+                     duration=None):
+    """Recompute per-node request/count/src aggregates for the active set.
+
+    ``duration`` overrides ``ts.duration`` (the migration pass charges
+    ``migrate_cost`` extra slots of runtime per completed move).
+    """
     placed = placement >= 0
-    active = placed & (admit_slot < slot) & (slot <= admit_slot + ts.duration)
+    dur = ts.duration if duration is None else duration
+    active = placed & (admit_slot < slot) & (slot <= admit_slot + dur)
     seg = jnp.clip(jnp.where(active, placement, 0), 0, n_nodes - 1)
     maskf = active.astype(jnp.float32)
 
@@ -180,6 +193,25 @@ def simulate_core(
     # clears); without reclamation they rejoin the retry queue + backoff.
     shed_to_pool = degrade_on and cfg.reclamation
 
+    # Live migration (repro.migration): Python-gated exactly like faults —
+    # migration=None traces the legacy program bit-identically.
+    mcfg = cfg.migration
+    migration_on = mcfg is not None
+    if migration_on and not faults_on:
+        raise ValueError(
+            "SimConfig.migration requires fault injection (SimConfig.faults "
+            "or an explicit fault_schedule): the migration pass is driven by "
+            "the schedule's drain/crash tables")
+    if migration_on:
+        from repro.api.policies import MigratePolicy
+
+        migrate_policy = MigratePolicy(margin_scale=mcfg.margin_scale)
+        if fault_schedule.draining is None:
+            # legacy schedules predate the drain table: all-False
+            fault_schedule = fault_schedule._replace(
+                draining=jnp.zeros((n_slots, n_nodes), bool))
+        mig_B = max(min(int(mcfg.bandwidth), int(mcfg.pool_size)), 0)
+
     init = dict(
         node=NodeState.zeros(n_nodes),
         ctrl=ctrl_impl.init(params),
@@ -208,6 +240,11 @@ def simulate_core(
         init["n_degrade_evicted"] = jnp.zeros((), jnp.int32)
     if degrade_on and cfg.reclamation:
         init["reclaimed"] = jnp.zeros((T,), bool)
+    if migration_on:
+        init["mig_pool"] = jnp.full((mcfg.pool_size,), -1, jnp.int32)
+        init["extra_slots"] = jnp.zeros((T,), jnp.int32)
+        init["n_migrated"] = jnp.zeros((), jnp.int32)
+        init["n_migration_failed"] = jnp.zeros((), jnp.int32)
 
     demand_scale = jnp.asarray(cfg.demand_scale, jnp.float32)
 
@@ -224,10 +261,16 @@ def simulate_core(
         return ids
 
     def slot_step(carry, xs):
-        if faults_on:
+        if migration_on:
+            slot, arrivals, slot_up, slot_cap, slot_mult, slot_drain = xs
+        elif faults_on:
             slot, arrivals, slot_up, slot_cap, slot_mult = xs
         else:
             slot, arrivals = xs  # arrivals: (A,) i32
+
+        # migrated tasks run migrate_cost extra slots (the transfer re-run)
+        dur = (ts.duration + carry["extra_slots"] if migration_on
+               else ts.duration)
 
         placement_in = carry["placement"]
         admit_in = carry["admit_slot"]
@@ -238,7 +281,7 @@ def simulate_core(
         # --- 0. fault + degradation evictions ------------------------------
         # Before the aggregates, so freed capacity is admissible this slot.
         if faults_on:
-            resident = (placement_in >= 0) & (slot <= admit_in + ts.duration)
+            resident = (placement_in >= 0) & (slot <= admit_in + dur)
             on_down = resident & ~slot_up[jnp.clip(placement_in, 0,
                                                    n_nodes - 1)]
             n_fault_ev = (carry["n_fault_evicted"]
@@ -257,12 +300,49 @@ def simulate_core(
                 evict_mask = on_down | degrade_mask
                 n_degrade_ev = (carry["n_degrade_evicted"]
                                 + jnp.sum(degrade_mask.astype(jnp.int32)))
+            forced_retry = on_down
+            if migration_on:
+                # Drain sources: fault-announced warning windows, plus —
+                # when overload_threshold > 0 — nodes whose previous-slot
+                # dominant estimate marks them as hotspots.  Down nodes are
+                # not sources (their residents were just crash-evicted).
+                drain_src = slot_drain
+                if mcfg.overload_threshold > 0:
+                    drain_src = drain_src | (
+                        jnp.max(carry["est"].est, axis=-1)
+                        > mcfg.overload_threshold)
+                drain_src = drain_src & slot_up
+                want = (resident & ~evict_mask
+                        & drain_src[jnp.clip(placement_in, 0, n_nodes - 1)])
+                # Revalidate carried pool entries (node recovered / task
+                # finished / crash-evicted this slot -> silently leave),
+                # then merge newly-draining residents in, valid-first.
+                pool_prev = carry["mig_pool"]
+                ppqi = jnp.maximum(pool_prev, 0)
+                pool_keep = (pool_prev >= 0) & want[ppqi]
+                in_pool = jnp.zeros((T,), jnp.int32).at[ppqi].max(
+                    pool_keep.astype(jnp.int32)).astype(bool)
+                merged_m = jnp.concatenate([
+                    jnp.where(pool_keep, pool_prev, -1),
+                    _compact_ids(want & ~in_pool, mcfg.pool_size)])
+                merged_m = merged_m[jnp.argsort(merged_m < 0, stable=True)]
+                mig_pool = merged_m[:mcfg.pool_size]
+                # Pool OVERFLOW cannot be moved before the fault lands:
+                # fall back to the evict-to-retry path (PR 8 semantics).
+                mig_over = merged_m[mcfg.pool_size:]
+                over_mask = jnp.zeros((T,), jnp.int32).at[
+                    jnp.maximum(mig_over, 0)].max(
+                        (mig_over >= 0).astype(jnp.int32)).astype(bool)
+                n_mig_failed = (carry["n_migration_failed"]
+                                + jnp.sum((mig_over >= 0).astype(jnp.int32)))
+                evict_mask = evict_mask | over_mask
+                forced_retry = forced_retry | over_mask
             placement_in = jnp.where(evict_mask, -1, placement_in)
             admit_in = jnp.where(evict_mask, -1, admit_in)
             # Evictions routed through the retry queue consume an attempt
             # and arm the exponential backoff (generalizing max_retries);
             # pool-shed victims wait on the reclaim pass instead.
-            retry_evict = on_down if shed_to_pool else evict_mask
+            retry_evict = forced_retry if shed_to_pool else evict_mask
             attempts = attempts + retry_evict.astype(jnp.int32)
             next_try = jnp.where(
                 retry_evict,
@@ -274,7 +354,8 @@ def simulate_core(
 
         # --- 1. node aggregates for the active set -----------------------
         active, seg, requested, n_tasks, src_count = _node_aggregates(
-            ts, placement_in, admit_in, slot, n_nodes)
+            ts, placement_in, admit_in, slot, n_nodes,
+            dur if migration_on else None)
 
         # --- 2. demand process: AR(1) around the task mean ----------------
         k_slot = jax.random.fold_in(key, slot)
@@ -321,8 +402,55 @@ def simulate_core(
             src_count=src_count,
         )
         if faults_on:
-            f_off = admission.fault_load_offset(slot_up, slot_cap)
+            if migration_on:
+                # Proactive drain: draining/overloaded nodes stop admitting
+                # (DRAIN_LOAD on their reserved row), which simultaneously
+                # excludes them as migration TARGETS — the kernel's cap
+                # filter rejects them for every task, wavefront/dedup sound
+                # because the offset is node-side (docs/kernels.md,
+                # "Source-exclusion cap").
+                avail = slot_up & ~drain_src
+                f_off = admission.fault_load_offset(avail, slot_cap)
+            else:
+                f_off = admission.fault_load_offset(slot_up, slot_cap)
             node = admission.mask_unavailable(node, f_off)
+
+        # --- 5.5 live migration off draining nodes -------------------------
+        # Runs BEFORE primary admission: keeping resident work beats
+        # admitting new work.  Successes re-place next slot (the task still
+        # runs on its source this slot) with admit_slot UNCHANGED — progress
+        # kept — at migrate_cost extra slots of runtime.
+        if migration_on:
+            n_migrated = carry["n_migrated"]
+            extra_slots = carry["extra_slots"]
+            if mig_B > 0:
+                attempt = mig_pool[:mig_B]     # bandwidth budget this slot
+                avalid = attempt >= 0
+                aqi = jnp.maximum(attempt, 0)
+                node, m_idx = admission.admit_queue(
+                    migrate_policy, node, ts.request[aqi], ts.src[aqi],
+                    ts.priority[aqi], avalid, ctrl.penalty, params,
+                    use_kernel=cfg.use_kernel,
+                    interpret=cfg.kernel_interpret,
+                    batch_mode=True, topk=cfg.wavefront_topk,
+                    dedup_buckets=cfg.dedup_buckets,
+                    tie_margin=cfg.wavefront_tie_margin)
+                m_ok = avalid & (m_idx >= 0)
+                # scatter-max via helpers: padded entries (aqi clamped to 0)
+                # contribute no-op zeros instead of racing task 0's entry
+                moved = jnp.zeros((T,), jnp.int32).at[aqi].max(
+                    m_ok.astype(jnp.int32)).astype(bool)
+                target = jnp.zeros((T,), jnp.int32).at[aqi].max(
+                    jnp.where(m_ok, m_idx, 0))
+                placement_in = jnp.where(moved, target, placement_in)
+                extra_slots = extra_slots + jnp.where(
+                    moved, jnp.int32(mcfg.migrate_cost), 0)
+                n_migrated = n_migrated + jnp.sum(m_ok.astype(jnp.int32))
+                # successes leave the pool; failures retry next slot
+                head_ok = jnp.concatenate([
+                    m_ok, jnp.zeros((mcfg.pool_size - mig_B,), bool)])
+                mig_pool = jnp.where(head_ok, -1, mig_pool)
+                mig_pool = mig_pool[jnp.argsort(mig_pool < 0, stable=True)]
 
         # --- 6. scheduling: retries first, then new arrivals ---------------
         queue_ids = jnp.concatenate([carry["retry"], arrivals])       # (Qr+A,)
@@ -338,6 +466,13 @@ def simulate_core(
         if backoff_on:
             # tasks inside their backoff window stay queued, no attempt
             ready = valid & (slot >= next_try[qi])
+            if faults_on:
+                # A retry against a cluster with NO admitting node is a
+                # guaranteed-infeasible attempt: defer eligibility (deferred
+                # tasks stay queued WITHOUT consuming an attempt, exactly
+                # like the backoff window) until at least one node admits.
+                any_admit = jnp.any(avail if migration_on else slot_up)
+                ready = ready & any_admit
         else:
             ready = valid
         node, placed_idx = admission.admit_queue(
@@ -473,6 +608,8 @@ def simulate_core(
             n_fault_evicted=n_fault_ev if faults_on else zero_i,
             n_degrade_evicted=n_degrade_ev if degrade_on else zero_i,
             degraded=(pressure.astype(jnp.int32) if degrade_on else zero_i),
+            n_migrated=n_migrated if migration_on else zero_i,
+            n_migration_failed=n_mig_failed if migration_on else zero_i,
         )
 
         new_carry = dict(
@@ -494,12 +631,19 @@ def simulate_core(
             new_carry["n_degrade_evicted"] = n_degrade_ev
         if degrade_on and cfg.reclamation:
             new_carry["reclaimed"] = reclaimed
+        if migration_on:
+            new_carry["mig_pool"] = mig_pool
+            new_carry["extra_slots"] = extra_slots
+            new_carry["n_migrated"] = n_migrated
+            new_carry["n_migration_failed"] = n_mig_failed
         return new_carry, metrics
 
     slots = jnp.arange(n_slots, dtype=jnp.int32)
     if faults_on:
         xs = (slots, arrival_table, fault_schedule.node_up,
               fault_schedule.capacity, fault_schedule.demand_mult)
+        if migration_on:
+            xs = xs + (fault_schedule.draining,)
     else:
         xs = (slots, arrival_table)
     final, metrics = jax.lax.scan(slot_step, init, xs)

@@ -192,6 +192,13 @@ class SimConfig(NamedTuple):
                                     # degradation controller.  None =
                                     # bit-identical to the fault-free path
                                     # (docs/api.md, "Faults & degradation")
+    migration: "object | None" = None  # repro.migration.MigrationConfig:
+                                       # live re-placement of tasks resident
+                                       # on draining/overloaded nodes through
+                                       # the shared admission core (requires
+                                       # faults; docs/api.md, "Migration").
+                                       # None = bit-identical to the
+                                       # migration-free path
 
 
 class SlotMetrics(NamedTuple):
@@ -223,6 +230,12 @@ class SlotMetrics(NamedTuple):
                                     # degradation controller
     degraded: jnp.ndarray     # (S,) i32 — 1 while the degradation
                               # controller is in its pressure (shedding) mode
+    n_migrated: jnp.ndarray   # (S,) cumulative tasks live-migrated off
+                              # draining/overloaded nodes (0 unless
+                              # SimConfig.migration)
+    n_migration_failed: jnp.ndarray  # (S,) cumulative migration failures:
+                                     # in-flight pool overflow falling back
+                                     # to the evict-to-retry path
 
 
 class SimResult(NamedTuple):

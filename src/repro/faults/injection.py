@@ -76,6 +76,15 @@ class FaultConfig(NamedTuple):
     storm_slowdown: float = 4.0    # decode step-time multiplier while stormed
     storm_duration: int = 8        # steps a storm lasts
 
+    # -- advance-warning drain windows (live migration) --
+    warn_slots: int = 0            # slots of advance warning a node gives
+                                   # before a crash/flap window opens: the
+                                   # FaultSchedule ``draining`` table marks
+                                   # the warning window.  Acted on only when
+                                   # migration is configured
+                                   # (SimConfig/EngineConfig ``migration``);
+                                   # 0 = no warning (all-False table)
+
     # -- graceful-degradation controller --
     degrade: bool = False          # enable the QoS-pressure controller
     qos_window: int = 8            # windowed cluster-QoS trend length
@@ -92,6 +101,13 @@ class FaultSchedule(NamedTuple):
     node_up: jnp.ndarray      # (S, N) bool — False while the node is down
     capacity: jnp.ndarray     # (S, N) f32 — usable capacity (1.0 = healthy)
     demand_mult: jnp.ndarray  # (S, N) f32 — demand shock on resident tasks
+    draining: "jnp.ndarray | None" = None
+                              # (S, N) bool — True inside the advance-warning
+                              # window before a crash/flap (FaultConfig
+                              # ``warn_slots``).  Consumed only by the
+                              # migration pass (SimConfig ``migration``);
+                              # None behaves as all-False (legacy schedules
+                              # stay valid)
 
     @staticmethod
     def none(n_slots: int, n_nodes: int) -> "FaultSchedule":
@@ -100,6 +116,7 @@ class FaultSchedule(NamedTuple):
             node_up=jnp.ones((n_slots, n_nodes), bool),
             capacity=jnp.ones((n_slots, n_nodes), jnp.float32),
             demand_mult=jnp.ones((n_slots, n_nodes), jnp.float32),
+            draining=jnp.zeros((n_slots, n_nodes), bool),
         )
 
 
@@ -114,6 +131,24 @@ def _windows(starts: jnp.ndarray, duration: int) -> jnp.ndarray:
     c = jnp.cumsum(starts.astype(jnp.int32), axis=0)
     lag = jnp.pad(c, ((min(duration, s), 0), (0, 0)))[:s]
     return (c - lag) > 0
+
+
+def _announce(bad: jnp.ndarray, warn_slots: int) -> jnp.ndarray:
+    """(S, N) bool drain table: node announces an impending bad window.
+
+    ``draining[s, n]`` is True when node n is healthy at slot s but a bad
+    window (down or flapping) opens within the next ``warn_slots`` slots —
+    the advance warning the migration pass acts on.  Derived from the
+    already-sampled event tables with a cumsum window (no RNG draws), so
+    adding a warning leaves every existing sampling stream bit-identical.
+    """
+    s = bad.shape[0]
+    if warn_slots <= 0:
+        return jnp.zeros_like(bad, dtype=bool)
+    c = jnp.cumsum(bad.astype(jnp.int32), axis=0)      # c[s] = sum bad[:s+1]
+    idx = jnp.minimum(jnp.arange(s) + warn_slots, s - 1)
+    upcoming = (c[idx] - c) > 0                        # any bad in (s, s+warn]
+    return upcoming & ~bad
 
 
 def sample_schedule(faults: FaultConfig, key: jax.Array, n_slots: int,
@@ -153,28 +188,38 @@ def sample_schedule(faults: FaultConfig, key: jax.Array, n_slots: int,
                             jnp.float32(1.0))
 
     return FaultSchedule(node_up=~down, capacity=capacity,
-                         demand_mult=demand_mult)
+                         demand_mult=demand_mult,
+                         draining=_announce(down | flapping,
+                                            faults.warn_slots))
 
 
 def crash_burst(n_slots: int, n_nodes: int, slot: int, frac: float,
-                duration: int, nodes=None) -> FaultSchedule:
+                duration: int, nodes=None, warn_slots: int = 0
+                ) -> FaultSchedule:
     """Explicit correlated-failure scenario: ``frac`` of the nodes go down
     together at ``slot`` for ``duration`` slots (host-side numpy — this is
     the user-supplied-schedule route; deterministic, no RNG).
 
     ``nodes`` overrides the victim set (default: the first ``frac * N``
     node indices — placement hashes tasks across nodes, so the prefix is
-    an unbiased victim set).
+    an unbiased victim set).  ``warn_slots`` opens a drain window on the
+    victims for that many slots before the burst (inert unless the run
+    configures migration, so one schedule serves every bench variant).
     """
     if nodes is None:
         nodes = np.arange(int(round(frac * n_nodes)))
     node_up = np.ones((n_slots, n_nodes), bool)
     lo, hi = max(int(slot), 0), min(int(slot) + int(duration), n_slots)
     node_up[lo:hi, np.asarray(nodes, int)] = False
+    draining = np.zeros((n_slots, n_nodes), bool)
+    if warn_slots > 0:
+        wlo = max(lo - int(warn_slots), 0)
+        draining[wlo:lo, np.asarray(nodes, int)] = True
     return FaultSchedule(
         node_up=jnp.asarray(node_up),
         capacity=jnp.ones((n_slots, n_nodes), jnp.float32),
         demand_mult=jnp.ones((n_slots, n_nodes), jnp.float32),
+        draining=jnp.asarray(draining),
     )
 
 

@@ -1,0 +1,73 @@
+"""Live task migration + proactive drain (ISSUE 9).
+
+PR 8 answered every node crash with evict-and-restart: resident tasks lose
+their progress and re-enter through the retry queue.  This package closes
+that gap with the VM-live-migration remedy of the energy-efficient
+data-center literature (Beloglazov/Buyya, PAPERS.md): tasks RESIDENT on
+draining or overloaded nodes are re-placed onto healthy nodes *before* the
+fault lands, keeping their progress.
+
+The subsystem is deliberately thin — placement decisions run through the
+SAME shared ``repro.api.admission.admit_queue`` wavefront path as primary
+admission and headroom reclamation, via the registered ``migrate`` policy
+(``repro.api.policies.MigratePolicy``).  Source-node exclusion needs no new
+kernel machinery: every migration source this slot is a draining (or
+overloaded) node, and all of those ride the node-side ``reserved`` plane at
+``admission.DRAIN_LOAD`` (the same ``mask_unavailable`` mechanism as fault
+offsets), so the kernel's per-task cap filter
+``all_R(P * est + reserved + r <= cap)`` rejects them for every candidate —
+per-task source exclusion expressed with a node-side offset and the
+template's cap scalar (docs/kernels.md, "Source-exclusion cap").
+
+Both front-ends consume :class:`MigrationConfig`:
+
+  * simulator — ``SimConfig(migration=..., faults=...)``: a per-slot
+    migration pass between fault eviction and primary admission, driven by
+    the ``FaultSchedule.draining`` advance-warning table
+    (``FaultConfig.warn_slots``);
+  * serving engine — ``EngineConfig(migration=..., faults=...)``: crashes
+    announce ``warn_slots`` steps ahead, residents move their KV-token
+    fraction to a target replica (progress kept, a ``migrate_cost``
+    transfer-latency stall) instead of the evict+progress-reset path, and
+    the overflow/shed path tries migrate-then-shed.
+
+``migration=None`` (the default) is bit-identical to the migration-free
+code at queue/simulator/Experiment/engine level — Python-level gating,
+exactly like ``faults=None`` (parity-tested in ``tests/test_migration.py``).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+
+class MigrationConfig(NamedTuple):
+    """Static live-migration knobs (hashable: a jit-static field of
+    ``SimConfig``/``EngineConfig``).  Requires ``faults`` (or an explicit
+    ``FaultSchedule``) — the drain tables are what migration acts on.
+    """
+
+    bandwidth: int = 32          # migration starts per slot/step (the
+                                 # task-slots/slot transfer budget); also the
+                                 # static width of the migrate admit_queue
+    migrate_cost: int = 1        # per-task migration cost, charged as extra
+                                 # slots of runtime (simulator) or a
+                                 # transfer-latency stall in decode steps
+                                 # (serving engine)
+    pool_size: int = 128         # static width of the in-flight pool: tasks
+                                 # awaiting a migration slot stay resident
+                                 # and queue here; pool OVERFLOW falls back
+                                 # to the PR 8 evict-to-retry path (counted
+                                 # in n_migration_failed)
+    overload_threshold: float = 0.0  # > 0: nodes whose dominant estimated
+                                     # load exceeds this also drain their
+                                     # residents (migration away from
+                                     # hotspots, not just faults); 0 = only
+                                     # fault-announced drains migrate
+    margin_scale: float = 0.0    # safety margin of the migrate policy's
+                                 # target cap, ``1 - margin_scale * P``:
+                                 # QoS pressure (rising penalty) backs
+                                 # migration targeting off like the reclaim
+                                 # pass; 0 = full capacity targets
+
+
+__all__ = ["MigrationConfig"]

@@ -68,6 +68,13 @@ newest-admission-first victim order, evicted requests re-enter the queue
 FIFO-stable ahead of fresh arrivals, the eviction counter is monotone,
 and no request is ever both ``done`` and resident.
 
+With ``EngineConfig(migration=...)`` (requires ``faults``) crashes are
+ANNOUNCED ``FaultConfig.warn_slots`` steps ahead and the drain pass moves
+residents' KV-token fraction to healthy replicas through the registered
+``migrate`` policy — progress kept at a ``migrate_cost`` transfer-latency
+stall — and the overflow path tries migrate-then-shed before paying the
+evict-and-restart tax (docs/api.md, "Migration").
+
 The engine is transport/model agnostic: ``decode_fn`` is any callable
 that advances each replica one decode step (the real-model driver in
 ``launch/serve.py`` plugs a jitted model.decode in; unit tests use a
@@ -104,9 +111,10 @@ from repro.estimators import resolve_estimator
 SLOT_AXIS = CPU   # active-request slots, normalized by max_active_per_replica
 KV_AXIS = MEM     # KV tokens, normalized by kv_budget_tokens
 
-# Effective load pinned onto drained replicas: far above any capacity or
-# oversubscription factor, so the capacity filter rejects every request.
-_DRAIN_LOAD = 1e6
+# Effective load pinned onto drained replicas: the shared sentinel from the
+# admission core (one constant for engine drains, fault offsets, and
+# migration source exclusion — satellite of ISSUE 9).
+_DRAIN_LOAD = admission.DRAIN_LOAD
 
 ADMISSION_MODES = ("eager", "sequential", "wavefront")
 
@@ -155,6 +163,9 @@ class Request:
     replica: int = -1
     evictions: int = 0
     done: bool = False
+    stall: int = 0             # transfer-latency steps left after a live
+                               # migration (no tokens generated while > 0)
+    migrations: int = 0        # completed live migrations (progress kept)
 
     @property
     def declared_footprint(self) -> int:
@@ -197,6 +208,17 @@ class EngineConfig:
                                        # bit-identical to the fault-free
                                        # engine (docs/api.md, "Faults &
                                        # degradation")
+    migration: "object | None" = None  # repro.migration.MigrationConfig:
+                                       # crashes announce ``warn_slots``
+                                       # steps ahead and residents move
+                                       # their KV-token fraction to a
+                                       # healthy replica (progress kept, a
+                                       # ``migrate_cost`` stall) instead of
+                                       # the evict+restart path; overflow
+                                       # tries migrate-then-shed.  Requires
+                                       # ``faults``.  None = bit-identical
+                                       # to the migration-free engine
+                                       # (docs/api.md, "Migration")
 
 
 @dataclasses.dataclass
@@ -216,6 +238,10 @@ class EngineStats:
     fault_evictions: int = 0   # requests evicted by replica crashes
     brownout_steps: int = 0    # steps the brownout controller was engaged
     brownout_deferred: int = 0  # admission decisions deferred by brownout
+    migrations: int = 0        # live migrations completed (progress kept)
+    migration_failed: int = 0  # migration candidates that fell back to the
+                               # evict-and-restart path (no feasible target
+                               # before the fault landed / budget exceeded)
 
 
 class ServeEngine:
@@ -251,6 +277,27 @@ class ServeEngine:
         self._storm_until = np.full(cfg.n_replicas, -1, np.int64)
         if cfg.faults is not None:
             self._fault_rng = np.random.default_rng((seed + 1) * 0x5EED)
+        # Live migration (repro.migration): crashes announce warn_slots
+        # steps ahead (down window [_down_from, _down_until)); residents
+        # of announced replicas re-place through the shared admission core
+        # via the registered "migrate" policy, keeping their progress.
+        if cfg.migration is not None and cfg.faults is None:
+            raise ValueError(
+                "EngineConfig.migration requires EngineConfig.faults: the "
+                "migration pass is driven by the crash announcements")
+        self._down_from = np.full(cfg.n_replicas, -1, np.int64)
+        self._mig_left = 0
+        if cfg.migration is not None:
+            from repro.api.policies import MigratePolicy
+
+            self._migrate_fn = admission.make_queue_admitter(
+                MigratePolicy(margin_scale=cfg.migration.margin_scale),
+                self.params,
+                batch_mode=cfg.admission_mode == "wavefront",
+                interpret=cfg.kernel_interpret,
+                topk=cfg.wavefront_topk,
+                dedup_buckets=cfg.dedup_buckets,
+                tie_margin=cfg.wavefront_tie_margin)
         # Load estimator (same registry as the simulator): refreshed once
         # per round from measured KV footprints; ``_usage_snap`` holds its
         # estimate — for the default "current" estimator that is exactly
@@ -327,11 +374,31 @@ class ServeEngine:
             burst = np.zeros(n, bool)
             burst[:int(round(fc.burst_frac * n))] = True
             crash |= up & burst
-        self._down_until = np.where(
-            crash, t + max(int(fc.crash_duration), 1), self._down_until)
-        for i in np.flatnonzero(crash):
+        if self.cfg.migration is not None:
+            # With migration on, a sampled crash is ANNOUNCED warn_slots
+            # steps ahead: the replica keeps decoding through the warning
+            # window (down window [_down_from, _down_until)) while the
+            # drain pass moves its residents; whatever is still resident
+            # when the crash LANDS pays the legacy evict-and-restart tax.
+            # Same rng draws as the legacy path — stream parity.
+            warn = max(int(fc.warn_slots), 0)
+            self._down_from = np.where(crash, t + warn, self._down_from)
+            self._down_until = np.where(
+                crash, t + warn + max(int(fc.crash_duration), 1),
+                self._down_until)
+            land = (self._down_from == t) & (self._down_until > t)
+            evict_replicas = np.flatnonzero(land)
+        else:
+            self._down_until = np.where(
+                crash, t + max(int(fc.crash_duration), 1), self._down_until)
+            evict_replicas = np.flatnonzero(crash)
+        for i in evict_replicas:
             victims = self.active[int(i)]
             self.active[int(i)] = []
+            if self.cfg.migration is not None:
+                # residents still here at landing could not be moved in
+                # time: the migrate attempt failed into the legacy path
+                self.stats.migration_failed += len(victims)
             evicted = []
             for victim in reversed(victims):     # newest admission first
                 victim.evictions += 1
@@ -549,6 +616,94 @@ class ServeEngine:
         self.queue = deque(req for req in reqs if req.replica < 0)
         return admitted
 
+    # ---------------- live migration (repro.migration) ----------------
+
+    def _in_flight(self) -> int:
+        """Requests still paying their transfer-latency stall."""
+        return sum(1 for rs in self.active.values()
+                   for r in rs if r.stall > 0)
+
+    def _try_migrate(self, cands: List[Request],
+                     extra_off: "np.ndarray | None" = None) -> List[Request]:
+        """Re-place candidate requests through the shared admission core.
+
+        One ``migrate``-policy admitter call over the candidates: successes
+        move their KV-token fraction to the target replica — ``generated``
+        (the progress) is KEPT, the request pays ``migrate_cost`` stalled
+        decode steps (the transfer latency) instead of a restart.  Bounded
+        by the per-step bandwidth budget and the in-flight pool
+        (``pool_size``); ``extra_off`` adds per-replica reserved offsets
+        (the overflow path excludes its source this way — draining sources
+        already ride ``_straggler_extra`` at the drain load).  Returns the
+        requests that moved; the rest stay put for the caller to handle.
+        """
+        mig = self.cfg.migration
+        room = int(mig.pool_size) - self._in_flight()
+        take = cands[:max(min(self._mig_left, room,
+                              int(self.cfg.admit_batch)), 0)]
+        if not take:
+            return []
+        r, srcs, prios = self._task_arrays(take)
+        node = self.node_state()
+        if extra_off is not None:
+            node = admission.mask_unavailable(
+                node, jnp.asarray(extra_off, jnp.float32))
+        q_eff = len(take)
+        pad = min(int(self.cfg.admit_batch),
+                  max(8, 1 << (q_eff - 1).bit_length()))
+        sl = np.zeros((pad, 2), np.float32)
+        sl[:q_eff] = r
+        ss = np.zeros(pad, np.int32)
+        ss[:q_eff] = srcs
+        pp = np.zeros(pad, np.int32)
+        pp[:q_eff] = prios
+        valid = np.arange(pad) < q_eff
+        _, pl = self._migrate_fn(node, jnp.asarray(sl), jnp.asarray(ss),
+                                 jnp.asarray(pp), jnp.asarray(valid),
+                                 jnp.asarray(float(self.ctrl.penalty),
+                                             jnp.float32))
+        pl = np.asarray(pl[:q_eff])
+        moved = []
+        for k, req in enumerate(take):
+            tgt = int(pl[k])
+            if tgt < 0:
+                continue
+            src_rep = req.replica
+            self.active[src_rep].remove(req)
+            self.active[tgt].append(req)
+            req.replica = tgt
+            req.stall = int(mig.migrate_cost)
+            req.migrations += 1
+            # move the KV-token fraction between the round snapshots so
+            # the SAME round's admission sees the transfer (the engine's
+            # reservation-scatter semantics, applied across replicas)
+            self._usage_snap[src_rep] -= req.current_footprint
+            self._usage_snap[tgt] += req.current_footprint
+            self._declared_snap[src_rep] -= req.declared_footprint
+            self._declared_snap[tgt] += req.declared_footprint
+            self.stats.migrations += 1
+            self._mig_left -= 1
+            moved.append(req)
+        return moved
+
+    def _migrate_draining(self):
+        """Drain pass: move residents of announced-crash replicas.
+
+        Announced replicas already carry the drain load in
+        ``_straggler_extra`` (``_down_until > t`` spans the warning
+        window), so they are excluded both as admission targets and as
+        migration targets with no extra masking — the engine analogue of
+        the simulator's source-exclusion offsets (docs/kernels.md).
+        Oldest residents first: they have the most progress to lose.
+        """
+        t = self.stats.steps
+        draining = np.flatnonzero((self._down_from > t)
+                                  & (self._down_until > t))
+        cands = [r for i in draining
+                 for r in self.active[int(i)] if r.stall == 0]
+        if cands:
+            self._try_migrate(cands)
+
     # ---------------- decode + overflow handling ----------------
 
     def _stub_decode(self, replica: int, reqs: List[Request]) -> float:
@@ -566,6 +721,9 @@ class ServeEngine:
             dt *= float(self._storm_slowdown[i])
         self.step_time_ema[i] = 0.8 * self.step_time_ema[i] + 0.2 * dt
         for r in reqs:
+            if r.stall > 0:
+                r.stall -= 1          # transfer latency: no token this step
+                continue
             if not r.done:
                 r.generated += 1
                 self.stats.tokens_generated += 1
@@ -574,6 +732,23 @@ class ServeEngine:
         # overflow: real usage exceeded the budget -> evict newest first
         usage = sum(r.current_footprint for r in reqs)
         cap = self.cfg.kv_budget_tokens
+        if usage > cap and self.cfg.migration is not None:
+            # migrate-then-shed (ISSUE 9): move the newest admissions off
+            # the overflowing replica first; only what cannot move pays
+            # the evict-and-restart tax below.
+            cands, freed = [], 0.0
+            for r2 in reversed(reqs):
+                if r2.stall > 0:
+                    continue
+                cands.append(r2)
+                freed += r2.current_footprint
+                if usage - freed <= cap:
+                    break
+            off = np.zeros(self.cfg.n_replicas, np.float32)
+            off[i] = _DRAIN_LOAD           # the source is never a target
+            moved = self._try_migrate(cands, extra_off=off)
+            self.stats.migration_failed += len(cands) - len(moved)
+            usage = sum(r.current_footprint for r in reqs)
         evicted = []
         while usage > cap and reqs:
             victim = reqs.pop()           # LIFO: newest admission pays
@@ -606,6 +781,9 @@ class ServeEngine:
         if cfg.faults is not None:
             self._inject_faults()
         self.refresh_snapshots()
+        if cfg.migration is not None:
+            self._mig_left = int(cfg.migration.bandwidth)
+            self._migrate_draining()
         self.admit_pending()
 
         for i in range(cfg.n_replicas):

@@ -162,6 +162,10 @@ def fault_recovery(result: SimResult, qos_target: float,
     gracefully or never needed to.  ``retained_task_slots`` (total
     running task-slots) is the admitted-work retention metric the
     fault-recovery bench compares across degradation strategies.
+    ``n_migrated`` / ``n_migration_failed`` split the live-migration pass
+    (``SimConfig(migration=...)``): tasks re-placed with progress kept vs
+    candidates that fell back to the evict-to-retry path (both 0 when
+    migration is off).
     """
     m = result.metrics
     return {
@@ -172,6 +176,8 @@ def fault_recovery(result: SimResult, qos_target: float,
         "degraded_frac": float(jnp.mean(m.degraded.astype(jnp.float32))),
         "retained_task_slots": int(jnp.sum(m.n_running)),
         "qos_min": float(jnp.min(m.qos)),
+        "n_migrated": int(m.n_migrated[-1]),
+        "n_migration_failed": int(m.n_migration_failed[-1]),
     }
 
 

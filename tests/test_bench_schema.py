@@ -209,7 +209,37 @@ def test_fault_recovery_rows_require_recovery_metric():
     probs = check_bench.schema_problems("f", doc)
     assert probs and any("recovery_slots" in p for p in probs), probs
     doc["runs"][0]["rows"][0]["recovery_slots"] = 21
+    # the latest run must also carry the migrate acceptance rows
+    probs = check_bench.schema_problems("f", doc)
+    assert probs and all("required row" in p for p in probs), probs
+    doc["runs"][0]["rows"] += [
+        {"name": "fault_crash_migrate", "us_per_call": 9.0,
+         "recovery_slots": 1, "retained_task_slots": 57204},
+        {"name": "fault_migrate_vs_graceful", "us_per_call": 0.0,
+         "recovery_slots": 1, "retained_task_slots": 57204,
+         "retention_gain": 1.58},
+    ]
     assert check_bench.schema_problems("f", doc) == []
+
+
+def test_migrate_rows_required_on_latest_run_only():
+    # Older runs predate migration and must stay valid; only the newest
+    # run is held to the migrate-row requirement.
+    full = [{"name": "crash_graceful", "us_per_call": 9.0,
+             "recovery_slots": 21},
+            {"name": "fault_crash_migrate", "us_per_call": 9.0,
+             "recovery_slots": 1, "retained_task_slots": 57204},
+            {"name": "fault_migrate_vs_graceful", "us_per_call": 0.0,
+             "recovery_slots": 1, "retained_task_slots": 57204,
+             "retention_gain": 1.58}]
+    legacy = [{"name": "crash_graceful", "us_per_call": 9.0,
+               "recovery_slots": 21}]
+    doc = {"bench": "fault_recovery",
+           "runs": [_run("old1234", legacy), _run("new1234", full)]}
+    assert check_bench.schema_problems("f", doc) == []
+    doc["runs"].reverse()
+    probs = check_bench.schema_problems("f", doc)
+    assert any("fault_crash_migrate" in p for p in probs), probs
 
 
 def test_fault_recovery_trajectory_contents():

@@ -1,0 +1,322 @@
+"""Live migration + proactive drain (``repro.migration``, ISSUE 9).
+
+The contract under test, in order of importance:
+
+1. **Opt-in parity** — ``migration=None`` is bit-identical to the
+   migration-free path even when the schedule CARRIES a drain table
+   (``warn_slots`` > 0), at the simulator, ``Experiment`` and engine
+   level; configuring migration without faults raises.
+2. **Migration semantics** — a task resident on a draining node
+   re-places onto a healthy node through the shared admission core
+   BEFORE the crash lands: placement moves, ``admit_slot`` (the
+   progress) is kept, runtime stretches by ``migrate_cost``, and the
+   crash then evicts nothing.
+3. **Bounded fallback** — zero bandwidth migrates nothing (residents
+   ride the legacy evict-to-retry path), pool overflow falls back
+   immediately and counts ``n_migration_failed``, and a task is never
+   simultaneously live in the retry queue and the migration pool.
+4. **Satellite regressions** — retries are deferred (no attempts
+   burned) while NO node admits; fault injection composes with the
+   ``quantile``/``learned`` estimators + reclamation.
+"""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import Experiment
+from repro.core import SimConfig, run
+from repro.faults import FaultConfig, FaultSchedule, crash_burst
+from repro.migration import MigrationConfig
+from repro.serving.engine import EngineConfig, Request, ServeEngine
+from repro.traces import generate_calibrated
+
+from tests.test_faults import _assert_results_equal, _taskset
+
+
+def _pin_to_node0(sched: FaultSchedule) -> FaultSchedule:
+    """Force slot-0 admissions onto node 0 by downing every other node."""
+    node_up = np.asarray(sched.node_up).copy()
+    node_up[0, 1:] = False
+    return sched._replace(node_up=jnp.asarray(node_up))
+
+
+# ------------------------------------------------------------------ parity
+
+@pytest.mark.parametrize("mode", ["sequential", "wavefront"])
+def test_sim_drain_table_inert_without_migration(mode):
+    # The SAME schedule with and without a drain table must be
+    # bit-identical as long as migration is off — one schedule serves
+    # migrate and non-migrate bench variants.
+    ts = generate_calibrated(0, 8, 32, offered_load=1.3)
+    cfg = SimConfig(n_nodes=8, n_slots=32, arrivals_per_slot=64,
+                    retry_capacity=32, admission_mode=mode,
+                    faults=FaultConfig())
+    plain = crash_burst(32, 8, slot=10, frac=0.25, duration=8)
+    warned = crash_burst(32, 8, slot=10, frac=0.25, duration=8,
+                         warn_slots=4)
+    _assert_results_equal(run(ts, cfg, "flex-f", fault_schedule=plain),
+                          run(ts, cfg, "flex-f", fault_schedule=warned))
+
+
+def test_experiment_warn_slots_inert_without_migration():
+    # warn_slots only derives the drain table from already-sampled event
+    # tables (no extra RNG draws): with migration off, sampled runs are
+    # bit-identical across warn settings, per vmapped seed.
+    ts = generate_calibrated(1, 8, 24, offered_load=1.3)
+    cfg = SimConfig(n_nodes=8, n_slots=24, arrivals_per_slot=64,
+                    retry_capacity=32)
+    res0 = Experiment(ts, cfg._replace(faults=FaultConfig(crash_rate=0.02)),
+                      policy="flex-f").run(seeds=[0, 1])
+    res1 = Experiment(
+        ts, cfg._replace(faults=FaultConfig(crash_rate=0.02, warn_slots=4)),
+        policy="flex-f").run(seeds=[0, 1])
+    _assert_results_equal(res0, res1)
+
+
+def test_engine_warn_slots_inert_without_migration():
+    def drive(fc):
+        eng = ServeEngine(EngineConfig(n_replicas=4, faults=fc), seed=3)
+        rng = np.random.default_rng(7)
+        for i in range(60):
+            eng.submit(Request(rid=i, prompt_len=int(rng.integers(50, 200)),
+                               max_tokens=100,
+                               true_tokens=int(rng.integers(30, 100))))
+        eng.run(48)
+        d = dataclasses.asdict(eng.stats)
+        d.pop("admit_latency_s")        # wall-clock noise
+        return d
+
+    fc = FaultConfig(burst_slot=10, burst_frac=0.5, burst_duration=12)
+    assert drive(fc._replace(warn_slots=4)) == drive(fc)
+
+
+def test_sim_migration_requires_faults():
+    ts = _taskset(arrival=[0], request=[0.3])
+    cfg = SimConfig(n_nodes=2, n_slots=8, arrivals_per_slot=4,
+                    retry_capacity=4, migration=MigrationConfig())
+    with pytest.raises(ValueError, match="migration requires fault"):
+        run(ts, cfg, "flex-f")
+
+
+def test_engine_migration_requires_faults():
+    with pytest.raises(ValueError, match="migration requires"):
+        ServeEngine(EngineConfig(n_replicas=2, migration=MigrationConfig()))
+
+
+def test_metrics_fields_zero_without_migration():
+    ts = _taskset(arrival=[0], request=[0.3])
+    res = run(ts, SimConfig(n_nodes=1, n_slots=4, arrivals_per_slot=4,
+                            retry_capacity=4), "flex-f")
+    assert int(res.metrics.n_migrated.sum()) == 0
+    assert int(res.metrics.n_migration_failed.sum()) == 0
+
+
+# ------------------------------------------------- migration semantics
+
+def _drain_scenario(migration, *, warn_slots=3, migrate_cost=2,
+                    duration=50, n_slots=16):
+    # One task pinned to node 0; node 0 drains for warn_slots slots and
+    # then crashes for 6 slots.  Node 1 stays healthy (after slot 0).
+    ts = _taskset(arrival=[0], request=[0.5], duration=duration)
+    cfg = SimConfig(n_nodes=2, n_slots=n_slots, arrivals_per_slot=4,
+                    retry_capacity=4, faults=FaultConfig(),
+                    migration=migration)
+    sched = _pin_to_node0(crash_burst(n_slots, 2, slot=6, frac=0.5,
+                                      duration=6, warn_slots=warn_slots))
+    return run(ts, cfg, "flex-f", fault_schedule=sched)
+
+
+def test_task_migrates_off_draining_node_keeping_progress():
+    res = _drain_scenario(MigrationConfig(bandwidth=4, pool_size=8,
+                                          migrate_cost=2))
+    assert int(res.metrics.n_migrated[-1]) == 1
+    assert int(res.metrics.n_migration_failed[-1]) == 0
+    assert int(res.metrics.n_fault_evicted[-1]) == 0   # crash found nothing
+    assert int(res.placement[0]) == 1                  # moved to node 1
+    assert int(res.admit_slot[0]) == 0                 # progress KEPT
+    assert int(res.metrics.n_rejected[-1]) == 0
+
+
+def test_migrate_cost_extends_runtime():
+    # duration=5 task: active slots 1..5 baseline; a migrate_cost=2 move
+    # stretches the active window by exactly 2 slots.
+    base = _drain_scenario(None, duration=5)
+    res = _drain_scenario(MigrationConfig(bandwidth=4, pool_size=8,
+                                          migrate_cost=2), duration=5)
+    assert int(res.metrics.n_migrated[-1]) == 1
+    assert int(res.active_slots[0]) == int(base.active_slots[0]) + 2
+
+
+def test_zero_bandwidth_falls_back_to_evict_and_retry():
+    res = _drain_scenario(MigrationConfig(bandwidth=0, pool_size=8))
+    assert int(res.metrics.n_migrated[-1]) == 0
+    assert int(res.metrics.n_fault_evicted[-1]) == 1   # legacy crash path
+    # re-admitted through the retry queue onto the healthy node, and the
+    # stale pool entry is dropped (never migrated after re-admission)
+    assert int(res.placement[0]) == 1
+    assert int(res.admit_slot[0]) > 6
+    assert int(res.metrics.n_rejected[-1]) == 0
+
+
+def test_pool_overflow_counts_failed_and_falls_back():
+    # Two residents on the draining node, pool_size=1, bandwidth=0: one
+    # task pools, the other overflows -> immediate evict-to-retry (it
+    # re-admits on the healthy node BEFORE the crash even lands).
+    ts = _taskset(arrival=[0, 0], request=[0.3, 0.3], duration=50)
+    cfg = SimConfig(n_nodes=2, n_slots=16, arrivals_per_slot=4,
+                    retry_capacity=4, faults=FaultConfig(),
+                    migration=MigrationConfig(bandwidth=0, pool_size=1))
+    sched = _pin_to_node0(crash_burst(16, 2, slot=6, frac=0.5, duration=6,
+                                      warn_slots=3))
+    res = run(ts, cfg, "flex-f", fault_schedule=sched)
+    assert int(res.metrics.n_migration_failed[-1]) == 1
+    assert int(res.metrics.n_migrated[-1]) == 0
+    placed = np.asarray(res.placement)
+    assert (placed == 1).all()                  # both ended on the healthy node
+    # the overflow victim re-admitted during the drain window (< slot 6),
+    # the pooled one only after the crash evicted it (> slot 6): at no
+    # point was either simultaneously live in pool AND retry queue.
+    admit = np.sort(np.asarray(res.admit_slot))
+    assert admit[0] < 6 < admit[1]
+    assert int(res.metrics.n_rejected[-1]) == 0
+
+
+def test_migration_beats_graceful_on_crash_burst():
+    # The reduced acceptance scenario shape: migrate-enabled must keep
+    # more task-slots than the fault-only run and evict fewer residents.
+    ts = generate_calibrated(0, 8, 40, offered_load=1.2)
+    cfg = SimConfig(n_nodes=8, n_slots=40, arrivals_per_slot=64,
+                    retry_capacity=32, faults=FaultConfig())
+    sched = crash_burst(40, 8, slot=15, frac=0.25, duration=10,
+                        warn_slots=4)
+    base = run(ts, cfg, "flex-f", fault_schedule=sched)
+    mig = run(ts, cfg._replace(
+        migration=MigrationConfig(bandwidth=16, pool_size=64)),
+        "flex-f", fault_schedule=sched)
+    assert int(mig.metrics.n_migrated[-1]) > 0
+    assert (int(mig.metrics.n_fault_evicted[-1])
+            < int(base.metrics.n_fault_evicted[-1]))
+    assert (int(jnp.sum(mig.metrics.n_running))
+            >= int(jnp.sum(base.metrics.n_running)))
+
+
+@pytest.mark.parametrize("mode", ["sequential", "wavefront"])
+def test_migration_modes_agree(mode):
+    # The migrate pass always runs batched; primary admission in either
+    # mode must produce the same decisions around it.
+    ts = generate_calibrated(2, 8, 32, offered_load=1.2)
+    cfg = SimConfig(n_nodes=8, n_slots=32, arrivals_per_slot=64,
+                    retry_capacity=32, admission_mode=mode,
+                    faults=FaultConfig(),
+                    migration=MigrationConfig(bandwidth=8, pool_size=32))
+    sched = crash_burst(32, 8, slot=12, frac=0.25, duration=8, warn_slots=4)
+    res = run(ts, cfg, "flex-f", fault_schedule=sched)
+    ref = run(ts, cfg._replace(admission_mode="sequential"), "flex-f",
+              fault_schedule=sched)
+    _assert_results_equal(res, ref)
+    assert int(res.metrics.n_migrated[-1]) == int(ref.metrics.n_migrated[-1])
+
+
+# --------------------------------------------------------------- engine
+
+def _engine_burst(migration, *, seed=0, horizon=50):
+    fc = FaultConfig(burst_slot=10, burst_frac=0.25, burst_duration=15,
+                     warn_slots=6)
+    eng = ServeEngine(EngineConfig(n_replicas=8, kv_budget_tokens=8192,
+                                   faults=fc, migration=migration),
+                      seed=seed)
+    rng = np.random.default_rng(7)
+    for i in range(80):
+        eng.submit(Request(rid=i, prompt_len=int(rng.integers(50, 200)),
+                           max_tokens=120,
+                           true_tokens=int(rng.integers(40, 120)),
+                           src=int(rng.integers(0, 8))))
+    eng.run(horizon)
+    return eng
+
+
+def test_engine_migration_rescues_announced_crash_victims():
+    e0 = _engine_burst(None)
+    e1 = _engine_burst(MigrationConfig(bandwidth=64, pool_size=128))
+    assert e1.stats.migrations > 0
+    assert e1.stats.fault_evictions < e0.stats.fault_evictions
+    # migrated requests kept their progress: at least one moved request
+    # exists and never had its generation reset
+    moved = [r for reqs in e1.active.values() for r in reqs
+             if r.migrations > 0]
+    done_moved = e1.stats.finished >= e0.stats.finished
+    assert done_moved or moved
+
+
+def test_engine_migrated_request_pays_stall_not_restart():
+    e1 = _engine_burst(MigrationConfig(bandwidth=64, pool_size=128,
+                                       migrate_cost=3))
+    assert e1.stats.migrations > 0
+    # a request that migrated was never fault-evicted (evictions reset
+    # generated; migration must not) unless it was ALSO later crashed
+    clean = [r for reqs in e1.active.values() for r in reqs
+             if r.migrations > 0 and r.evictions == 0]
+    for r in clean:
+        assert r.generated >= 0 and r.replica >= 0
+
+
+# -------------------------------------- satellite: retry deferral fix
+
+def test_retries_deferred_while_no_node_admits():
+    # One node, down for 10 slots, max_retries=3: without deferral the
+    # evicted task burns an attempt per down slot and exhausts; with the
+    # fix it waits (no attempts consumed) and re-admits at recovery.
+    ts = _taskset(arrival=[0], request=[0.5], duration=50)
+    cfg = SimConfig(n_nodes=1, n_slots=20, arrivals_per_slot=4,
+                    retry_capacity=4, max_retries=3, faults=FaultConfig())
+    burst = crash_burst(20, 1, slot=2, frac=1.0, duration=10)
+    res = run(ts, cfg, "flex-f", fault_schedule=burst)
+    assert int(res.metrics.n_fault_evicted[-1]) == 1
+    assert int(res.metrics.n_rejected[-1]) == 0     # NOT exhausted
+    assert int(res.admit_slot[0]) == 12             # re-admitted at recovery
+    assert int(res.placement[0]) == 0
+
+
+def test_retry_deferral_does_not_change_partial_outages():
+    # With any node still up, retries keep flowing: the evicted task
+    # re-admits onto the healthy node immediately (no spurious deferral).
+    ts = _taskset(arrival=[0, 0], request=[0.3, 0.3], duration=50)
+    cfg = SimConfig(n_nodes=2, n_slots=16, arrivals_per_slot=4,
+                    retry_capacity=4, max_retries=3, faults=FaultConfig())
+    sched = _pin_to_node0(crash_burst(16, 2, slot=4, frac=0.5, duration=8))
+    res = run(ts, cfg, "flex-f", fault_schedule=sched)
+    assert int(res.metrics.n_fault_evicted[-1]) == 2
+    placed = np.asarray(res.placement)
+    assert (placed == 1).all()
+    assert int(np.max(np.asarray(res.admit_slot))) == 5   # next slot, no wait
+
+
+# ---------------------------- satellite: fault x estimator composition
+
+@pytest.mark.parametrize("estimator", ["quantile", "learned"])
+def test_faults_compose_with_estimators_and_reclamation(estimator):
+    ts = generate_calibrated(4, 8, 32, offered_load=1.4)
+    cfg = SimConfig(n_nodes=8, n_slots=32, arrivals_per_slot=64,
+                    retry_capacity=32, estimator=estimator,
+                    reclamation=True,
+                    faults=FaultConfig(surge_rate=0.1, surge_frac=0.5,
+                                       surge_mult=3.0))
+    res = run(ts, cfg, "flex-f")
+    q = np.asarray(res.metrics.qos)
+    assert np.isfinite(q).all() and (0.0 <= q).all() and (q <= 1.0).all()
+    assert int(res.metrics.n_rejected[-1]) >= 0
+    # the reclaim pass stays live under fault pressure
+    assert int(res.metrics.n_reclaimed[-1]) >= 0
+
+
+@pytest.mark.parametrize("estimator", ["quantile", "learned"])
+def test_estimator_runs_unchanged_by_zero_faultconfig(estimator):
+    ts = generate_calibrated(5, 8, 24, offered_load=1.3)
+    cfg = SimConfig(n_nodes=8, n_slots=24, arrivals_per_slot=64,
+                    retry_capacity=32, estimator=estimator,
+                    reclamation=True)
+    res0 = run(ts, cfg, "flex-f")
+    res1 = run(ts, cfg._replace(faults=FaultConfig()), "flex-f")
+    _assert_results_equal(res0, res1)
