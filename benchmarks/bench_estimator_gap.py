@@ -11,6 +11,12 @@ against the no-reclamation `current` baseline.
 
 Acceptance bar (ISSUE): some predictive variant admits >= 1.2x the
 baseline at equal-or-lower QoS-violation fraction.
+
+The ``guard_surge_*`` rows (appended from ``benchmarks.bench_guard``)
+record the misprediction-safety side of the same story: what the
+predictive+reclamation stack does when the estimator's signal goes stale
+mid-run, with and without the drift watchdog (ISSUE 10).
+``scripts/check_bench.py`` requires them in the latest run.
 """
 import time
 
@@ -61,4 +67,6 @@ def run(full: bool):
             "qos_violation_delta": s["qos_violation_frac"]
             - base["qos_violation_frac"],
         }))
+    from benchmarks import bench_guard
+    rows.extend(bench_guard.run(full))
     return rows

@@ -35,9 +35,12 @@ METRIC = "decisions_per_s"
 # Trajectories that must exist in the repo root (checked when running on
 # the default glob): the serving trajectory is the regression record for
 # the engine admission hot loop (ISSUE 7), the fault-recovery trajectory
-# the robustness record for the crash-burst scenario (ISSUE 8) — losing
-# either file would silently drop its guard.
-REQUIRED_FILES = ("BENCH_serving.json", "BENCH_fault_recovery.json")
+# the robustness record for the crash-burst scenario (ISSUE 8), the
+# estimator-gap trajectory the overcommit record that also carries the
+# guard-surge safety rows (ISSUE 10) — losing any file would silently
+# drop its guard.
+REQUIRED_FILES = ("BENCH_serving.json", "BENCH_fault_recovery.json",
+                  "BENCH_estimator_gap.json")
 
 # Per-bench metrics every row must carry (beyond 'us_per_call'): without
 # them the regression diff has nothing to compare.
@@ -56,6 +59,14 @@ REQUIRED_ROWS = {
         "fault_crash_migrate": ("recovery_slots", "retained_task_slots"),
         "fault_migrate_vs_graceful": (
             "recovery_slots", "retained_task_slots", "retention_gain"),
+    },
+    # The guard-surge rows are the misprediction-safety acceptance record
+    # (ISSUE 10): the unguarded row documents the QoS collapse the drift
+    # watchdog exists for, the guarded row the safety + retained-upside
+    # verdict.  Losing either would silently drop the safe-mode guard.
+    "estimator_gap": {
+        "guard_surge_unguarded": ("qos_min",),
+        "guard_surge_guarded": ("qos_min", "admitted_gain_retained"),
     },
 }
 

@@ -34,6 +34,10 @@ Fails (exit 1 / non-empty problem list) when:
     knob is undocumented there, or ``docs/kernels.md`` lost the
     "Source-exclusion cap" note (why the migrate pass excludes source
     nodes via node-side reserved offsets);
+  * ``docs/api.md`` lost its "Guard" section, a ``GuardConfig`` knob
+    (drift watchdog / circuit breaker) is undocumented there, or
+    ``docs/kernels.md`` lost the "Confidence-scaled cap" note (how the
+    guard's error quantile rides the reclaim/migrate cap scalar);
   * a cross-linked docs file (``docs/kernels.md``) has gone missing.
 
 Run standalone (``python scripts/check_docs.py``) or through the tier-1
@@ -130,7 +134,7 @@ def problems() -> list:
     for knob in ("wavefront_topk", "dedup_buckets", "wavefront_tie_margin",
                  "estimator", "reclamation", "reclaim_margin",
                  "reclaim_pool", "retry_backoff", "retry_backoff_cap",
-                 "faults", "migration"):
+                 "retry_jitter", "faults", "migration", "guard"):
         if knob in SimConfig._fields and f"`{knob}`" not in api_md:
             out.append(
                 f"SimConfig field {knob!r} is not documented in docs/api.md")
@@ -173,6 +177,27 @@ def problems() -> list:
             "docs/kernels.md lost its 'Source-exclusion cap' note (how "
             "the migrate pass excludes source nodes through node-side "
             "DRAIN_LOAD reserved offsets, wavefront/dedup sound)")
+
+    # Drift guard: every GuardConfig knob must appear in the "Guard"
+    # section of docs/api.md (the breaker's trip/cooldown/probe behavior
+    # is entirely knob-driven), and docs/kernels.md must keep the
+    # "Confidence-scaled cap" note — it documents why the guard's
+    # continuous tightening is a slot-constant cap scalar (wavefront
+    # sound), not new kernel machinery.
+    from repro.guard import GuardConfig
+    if "## Guard" not in api_md:
+        out.append("docs/api.md has no '## Guard' section but "
+                   "repro.guard exposes the drift-watchdog API")
+    for knob in GuardConfig._fields:
+        if f"`{knob}`" not in api_md:
+            out.append(
+                f"GuardConfig knob {knob!r} is not documented in "
+                f"docs/api.md")
+    if kernels_md and "Confidence-scaled cap" not in kernels_md:
+        out.append(
+            "docs/kernels.md lost its 'Confidence-scaled cap' note (how "
+            "the guard's drift quantile scales the penalty riding the "
+            "reclaim/migrate cap scalar, slot-constant)")
 
     # Serving engine: every EngineConfig knob must be documented in the
     # "Serving" section of docs/api.md (the knob set grew with the

@@ -1,0 +1,24 @@
+#!/usr/bin/env bash
+# One-shot local CI: the exact gate a PR must pass.
+#
+#   1. tier-1 test suite (slow-marked tests excluded, like the driver);
+#   2. bench-trajectory check, STRICT — schema violations AND perf
+#      regressions fail (the standalone default only flags regressions);
+#   3. docs-drift check (registry/config knobs vs docs/*.md).
+#
+# Run from anywhere: paths resolve relative to this script.
+set -euo pipefail
+
+ROOT="$(cd "$(dirname "${BASH_SOURCE[0]}")/.." && pwd)"
+cd "$ROOT"
+
+echo "== tier-1 tests =="
+PYTHONPATH=src python -m pytest -q -m "not slow"
+
+echo "== bench trajectories (strict) =="
+python scripts/check_bench.py --strict
+
+echo "== docs drift =="
+python scripts/check_docs.py
+
+echo "ci.sh: all gates passed"

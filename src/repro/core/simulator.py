@@ -105,6 +105,9 @@ from repro.faults import injection as _inject
 # for any plausible horizon, so the per-slot demand-noise stream
 # (fold_in(key, slot)) is untouched and faults=None stays bit-identical.
 _FAULT_STREAM = 0x7FFFFFFF
+# dedicated stream for the per-task retry-jitter table (same reasoning:
+# outside the slot range, so retry_jitter=0 stays bit-identical)
+_JITTER_STREAM = 0x7FFFFFFE
 
 
 def build_arrival_table(arrival: np.ndarray, n_slots: int,
@@ -180,7 +183,14 @@ def simulate_core(
     # program (bit-identical decisions, zero overhead).
     fcfg = cfg.faults
     faults_on = fcfg is not None or fault_schedule is not None
-    backoff_on = faults_on or cfg.retry_backoff > 0
+    jitter_on = cfg.retry_jitter > 0
+    backoff_on = faults_on or cfg.retry_backoff > 0 or jitter_on
+    if jitter_on:
+        # per-task deterministic jitter table, fold_in'd from task id on a
+        # dedicated stream: desynchronizes post-crash retry storms without
+        # touching the demand-noise or fault-sampling streams
+        jit_tab = _inject.jitter_table(
+            jax.random.fold_in(key, _JITTER_STREAM), T, cfg.retry_jitter)
     degrade_on = bool(faults_on and fcfg is not None and fcfg.degrade)
     if faults_on and fault_schedule is None:
         fault_schedule = _inject.sample_schedule(
@@ -211,6 +221,13 @@ def simulate_core(
             fault_schedule = fault_schedule._replace(
                 draining=jnp.zeros((n_slots, n_nodes), bool))
         mig_B = max(min(int(mcfg.bandwidth), int(mcfg.pool_size)), 0)
+
+    # Estimator-drift guard (repro.guard): Python-gated exactly like
+    # faults/migration — guard=None traces the legacy program bit-identically.
+    gcfg = cfg.guard
+    guard_on = gcfg is not None
+    if guard_on:
+        from repro.guard import watchdog as _wd
 
     init = dict(
         node=NodeState.zeros(n_nodes),
@@ -245,6 +262,11 @@ def simulate_core(
         init["extra_slots"] = jnp.zeros((T,), jnp.int32)
         init["n_migrated"] = jnp.zeros((), jnp.int32)
         init["n_migration_failed"] = jnp.zeros((), jnp.int32)
+    if guard_on:
+        init["g_win"] = _wd.init_window(gcfg.window, NUM_RESOURCES)
+        init["g_state"] = jnp.zeros((), jnp.int32)   # CLOSED
+        init["g_timer"] = jnp.zeros((), jnp.int32)
+        init["n_guard_deferred"] = jnp.zeros((), jnp.int32)
 
     demand_scale = jnp.asarray(cfg.demand_scale, jnp.float32)
 
@@ -344,11 +366,11 @@ def simulate_core(
             # pool-shed victims wait on the reclaim pass instead.
             retry_evict = forced_retry if shed_to_pool else evict_mask
             attempts = attempts + retry_evict.astype(jnp.int32)
-            next_try = jnp.where(
-                retry_evict,
-                slot + 1 + _inject.backoff_delay(
-                    attempts, cfg.retry_backoff, cfg.retry_backoff_cap),
-                next_try)
+            ev_delay = _inject.backoff_delay(
+                attempts, cfg.retry_backoff, cfg.retry_backoff_cap)
+            if jitter_on:
+                ev_delay = ev_delay + jit_tab
+            next_try = jnp.where(retry_evict, slot + 1 + ev_delay, next_try)
             evict_requeue = retry_evict & (attempts <= cfg.max_retries)
             evict_exhausted = retry_evict & (attempts > cfg.max_retries)
 
@@ -391,11 +413,39 @@ def simulate_core(
         # --- 4. penalty controller ----------------------------------------
         ctrl = ctrl_impl.update(carry["ctrl"], q_cluster, params)
 
+        # --- 4.5 estimator-drift watchdog + breaker ------------------------
+        # The estimate refreshed LAST slot is what admission judged this
+        # slot's active set by, so its error against this slot's realized
+        # usage is the one-slot-ahead drift of analysis.estimator_error.
+        # Runs BEFORE the refresh (the refreshed estimate hasn't been used
+        # yet) and the resulting state governs THIS slot's passes.
+        reclaim_penalty = ctrl.penalty
+        if guard_on:
+            g_err = _wd.drift_sample(carry["est"].est, node_usage)
+            g_win = _wd.push_errors(carry["g_win"], g_err)
+            g_err_q = _wd.trip_statistic(g_win, gcfg.err_quantile)
+            g_state, g_timer, _ = _wd.breaker_step(
+                carry["g_state"], carry["g_timer"], g_err_q, gcfg)
+            g_open = g_state == _wd.OPEN
+            # confidence-gated reclamation: the reclaim/migrate passes see
+            # a drift-scaled penalty, tightening their 1 - margin * P cap
+            # continuously while the breaker is still closed (slot-constant
+            # scalar -> rides the kernel cap template, wavefront sound)
+            reclaim_penalty = ctrl.penalty * _wd.penalty_scale(g_err_q, gcfg)
+            n_guard_def = carry["n_guard_deferred"]
+
         # --- 5. estimator refresh ------------------------------------------
         k_est = jax.random.fold_in(k_slot, 1)
         est_state = est.refresh(carry["est"], node_usage, k_est)
+        est_adm = est_state.est
+        if guard_on:
+            # safe mode while OPEN: admission judges nodes by the estimate
+            # blended back toward their residents' REQUESTED aggregates
+            # (metrics keep reporting the raw estimate)
+            est_adm = _wd.blend_estimate(est_state.est, requested,
+                                         g_open, gcfg)
         node = NodeState(
-            est_usage=est_state.est,
+            est_usage=est_adm,
             reserved=jnp.zeros_like(node_usage),
             requested=requested,
             n_tasks=n_tasks,
@@ -429,7 +479,7 @@ def simulate_core(
                 aqi = jnp.maximum(attempt, 0)
                 node, m_idx = admission.admit_queue(
                     migrate_policy, node, ts.request[aqi], ts.src[aqi],
-                    ts.priority[aqi], avalid, ctrl.penalty, params,
+                    ts.priority[aqi], avalid, reclaim_penalty, params,
                     use_kernel=cfg.use_kernel,
                     interpret=cfg.kernel_interpret,
                     batch_mode=True, topk=cfg.wavefront_topk,
@@ -496,6 +546,8 @@ def simulate_core(
         if backoff_on:
             delay = _inject.backoff_delay(
                 attempts[qi], cfg.retry_backoff, cfg.retry_backoff_cap)
+            if jitter_on:
+                delay = delay + jit_tab[qi]
             # max-scatter: invalid queue slots (qi clamped to 0) contribute
             # a no-op 0 instead of clobbering task 0's entry, and per-task
             # next_try is monotone (later failures -> later slots + larger
@@ -560,9 +612,19 @@ def simulate_core(
             # reclaim policy's kernel_inputs hook + batch_mode).
             pvalid = pool >= 0
             pqi = jnp.maximum(pool, 0)
+            if guard_on:
+                # breaker gating: full pool while CLOSED, suspended while
+                # OPEN, a bounded head-of-pool trickle while HALF_OPEN (the
+                # pool is compacted valid-first, so the head is FIFO)
+                g_allow = (jnp.arange(cfg.reclaim_pool, dtype=jnp.int32)
+                           < _wd.reclaim_width(g_state, cfg.reclaim_pool,
+                                               gcfg))
+                n_guard_def = n_guard_def + jnp.sum(
+                    (pvalid & ~g_allow).astype(jnp.int32))
+                pvalid = pvalid & g_allow
             node, r_idx = admission.admit_queue(
                 reclaim_policy, node, ts.request[pqi], ts.src[pqi],
-                ts.priority[pqi], pvalid, ctrl.penalty, params,
+                ts.priority[pqi], pvalid, reclaim_penalty, params,
                 use_kernel=cfg.use_kernel, interpret=cfg.kernel_interpret,
                 batch_mode=True, topk=cfg.wavefront_topk,
                 dedup_buckets=cfg.dedup_buckets,
@@ -610,6 +672,15 @@ def simulate_core(
             degraded=(pressure.astype(jnp.int32) if degrade_on else zero_i),
             n_migrated=n_migrated if migration_on else zero_i,
             n_migration_failed=n_mig_failed if migration_on else zero_i,
+            # guard leaves are EMPTY (stacked (S, 0)) when guard=None —
+            # guard_report raises on .size == 0 and summarize degrades
+            # gracefully, mirroring the node_usage gating above
+            guard_tripped=(g_state if guard_on
+                           else jnp.zeros((0,), jnp.int32)),
+            n_guard_deferred=(n_guard_def if guard_on
+                              else jnp.zeros((0,), jnp.int32)),
+            guard_err_q=(g_err_q if guard_on
+                         else jnp.zeros((0,), jnp.float32)),
         )
 
         new_carry = dict(
@@ -636,6 +707,11 @@ def simulate_core(
             new_carry["extra_slots"] = extra_slots
             new_carry["n_migrated"] = n_migrated
             new_carry["n_migration_failed"] = n_mig_failed
+        if guard_on:
+            new_carry["g_win"] = g_win
+            new_carry["g_state"] = g_state
+            new_carry["g_timer"] = g_timer
+            new_carry["n_guard_deferred"] = n_guard_def
         return new_carry, metrics
 
     slots = jnp.arange(n_slots, dtype=jnp.int32)

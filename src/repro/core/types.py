@@ -187,6 +187,13 @@ class SimConfig(NamedTuple):
                                    # re-queue (retry next slot),
                                    # bit-identical to pre-backoff decisions
     retry_backoff_cap: int = 64    # upper bound on the backoff delay (slots)
+    retry_jitter: int = 0          # deterministic per-task retry jitter:
+                                   # each task adds a fixed offset in
+                                   # [0, retry_jitter] (fold_in'd from its
+                                   # id) to every backoff delay, so a mass
+                                   # crash doesn't produce a synchronized
+                                   # retry storm.  0 = no jitter,
+                                   # bit-identical to pre-jitter decisions
     faults: "object | None" = None  # repro.faults.FaultConfig: deterministic
                                     # fault injection + the QoS-pressure
                                     # degradation controller.  None =
@@ -199,6 +206,11 @@ class SimConfig(NamedTuple):
                                        # faults; docs/api.md, "Migration").
                                        # None = bit-identical to the
                                        # migration-free path
+    guard: "object | None" = None  # repro.guard.GuardConfig: estimator-
+                                   # drift watchdog + circuit breaker
+                                   # making overcommit misprediction-safe
+                                   # (docs/api.md, "Guard").  None =
+                                   # bit-identical to the unguarded path
 
 
 class SlotMetrics(NamedTuple):
@@ -236,6 +248,15 @@ class SlotMetrics(NamedTuple):
     n_migration_failed: jnp.ndarray  # (S,) cumulative migration failures:
                                      # in-flight pool overflow falling back
                                      # to the evict-to-retry path
+    guard_tripped: jnp.ndarray  # (S,) i32 breaker state governing the slot
+                                # (0 closed / 1 open / 2 half-open); (S, 0)
+                                # f32/i32 empty unless SimConfig.guard —
+                                # guard_report raises without it
+    n_guard_deferred: jnp.ndarray  # (S,) cumulative reclaim candidates
+                                   # deferred by the breaker (suspension +
+                                   # trickle clipping); (S, 0) unless guard
+    guard_err_q: jnp.ndarray  # (S,) windowed drift-error quantile the
+                              # breaker acted on; (S, 0) unless guard
 
 
 class SimResult(NamedTuple):

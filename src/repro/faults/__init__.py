@@ -17,7 +17,10 @@ from repro.faults.injection import (
     FaultSchedule,
     backoff_delay,
     crash_burst,
+    install_config_validator,
+    jitter_table,
     sample_schedule,
+    usage_surge,
 )
 
 __all__ = [
@@ -25,7 +28,10 @@ __all__ = [
     "FaultSchedule",
     "backoff_delay",
     "crash_burst",
+    "install_config_validator",
+    "jitter_table",
     "sample_schedule",
+    "usage_surge",
     "push_window",
     "select_victims",
     "under_pressure",

@@ -45,6 +45,35 @@ import jax.numpy as jnp
 import numpy as np
 
 
+def install_config_validator(cls, validator) -> None:
+    """Make a ``typing.NamedTuple`` config fail fast at construction.
+
+    ``typing.NamedTuple`` prohibits overriding ``__new__``/``_make`` in
+    the class body, so validation is attached AFTER the class is built:
+    every construction route — positional/keyword ``__new__``, ``_make``,
+    and ``_replace`` (which calls ``_make``) — funnels through
+    ``validator(self)``, which raises :class:`ValueError` on a degenerate
+    config instead of letting it build a silently-broken schedule.
+    """
+    orig_new = cls.__new__
+
+    def __new__(_cls, *args, **kwargs):
+        self = orig_new(_cls, *args, **kwargs)
+        validator(self)
+        return self
+
+    def _make(_cls, iterable):
+        self = tuple.__new__(_cls, iterable)
+        if len(self) != len(cls._fields):
+            raise TypeError(
+                f"Expected {len(cls._fields)} arguments, got {len(self)}")
+        validator(self)
+        return self
+
+    cls.__new__ = staticmethod(__new__)
+    cls._make = classmethod(_make)
+
+
 class FaultConfig(NamedTuple):
     """Static fault-injection + degradation knobs (hashable: a jit-static
     field of ``SimConfig``/``EngineConfig``).  All rates are per node (or
@@ -93,6 +122,63 @@ class FaultConfig(NamedTuple):
     degrade_spare_production: bool = True  # never evict production/system
                                            # tasks (False = naive
                                            # evict-everything recovery)
+
+
+def _validate_faults(cfg: "FaultConfig") -> None:
+    """Reject degenerate fault configs at construction (fail fast).
+
+    A negative rate silently samples nothing, a negative duration builds
+    an empty window table, a zero qos_window crashes deep inside the scan
+    — all three used to surface slots later as a mysteriously-inert or
+    exploding run rather than at the line that wrote the config.
+    """
+    for knob in ("crash_rate", "flap_rate", "surge_rate", "storm_rate"):
+        v = getattr(cfg, knob)
+        if not 0.0 <= float(v) <= 1.0:
+            raise ValueError(
+                f"FaultConfig.{knob} must be a probability in [0, 1], "
+                f"got {v!r}")
+    for knob in ("crash_duration", "burst_duration", "flap_duration",
+                 "surge_duration", "storm_duration"):
+        if int(getattr(cfg, knob)) <= 0:
+            raise ValueError(
+                f"FaultConfig.{knob} must be a positive slot count, "
+                f"got {getattr(cfg, knob)!r}")
+    if cfg.burst_slot < -1:
+        raise ValueError(
+            f"FaultConfig.burst_slot must be >= 0 (or -1 for no burst), "
+            f"got {cfg.burst_slot!r}")
+    if not 0.0 <= float(cfg.burst_frac) <= 1.0:
+        raise ValueError(
+            f"FaultConfig.burst_frac must be in [0, 1], "
+            f"got {cfg.burst_frac!r}")
+    if not 0.0 <= float(cfg.surge_frac) <= 1.0:
+        raise ValueError(
+            f"FaultConfig.surge_frac must be in [0, 1], "
+            f"got {cfg.surge_frac!r}")
+    if float(cfg.flap_capacity) < 0.0:
+        raise ValueError(
+            f"FaultConfig.flap_capacity must be >= 0, "
+            f"got {cfg.flap_capacity!r}")
+    for knob in ("surge_mult", "storm_slowdown"):
+        if float(getattr(cfg, knob)) <= 0.0:
+            raise ValueError(
+                f"FaultConfig.{knob} must be > 0, "
+                f"got {getattr(cfg, knob)!r}")
+    if cfg.warn_slots < 0:
+        raise ValueError(
+            f"FaultConfig.warn_slots must be >= 0, got {cfg.warn_slots!r}")
+    if cfg.qos_window <= 0:
+        raise ValueError(
+            f"FaultConfig.qos_window must be a positive window length, "
+            f"got {cfg.qos_window!r}")
+    if cfg.degrade_evict < 0:
+        raise ValueError(
+            f"FaultConfig.degrade_evict must be >= 0, "
+            f"got {cfg.degrade_evict!r}")
+
+
+install_config_validator(FaultConfig, _validate_faults)
 
 
 class FaultSchedule(NamedTuple):
@@ -221,6 +307,62 @@ def crash_burst(n_slots: int, n_nodes: int, slot: int, frac: float,
         demand_mult=jnp.ones((n_slots, n_nodes), jnp.float32),
         draining=jnp.asarray(draining),
     )
+
+
+def usage_surge(n_slots: int, n_nodes: int, start: int, ramp: int,
+                hold: int, peak_mult: float) -> FaultSchedule:
+    """Cluster-wide usage-surge schedule with a RAMP (host-side numpy).
+
+    Demand on every resident task climbs linearly 1 → ``peak_mult`` over
+    ``ramp`` slots from ``start``, holds the peak for ``hold`` slots, and
+    ramps back down symmetrically.  The ramp is the adversarial input for
+    a windowed/learned estimator — the estimate keeps chasing a moving
+    target, so drift shows up EARLY on the ramp, before QoS collapses at
+    the peak.  That ordering is what gives a drift watchdog something to
+    act on (the ``bench_guard`` scenario); a step surge would trip the
+    breaker and break QoS in the same slot.
+    """
+    mult = np.ones(n_slots, np.float32)
+    start, ramp, hold = int(start), max(int(ramp), 1), max(int(hold), 0)
+    for i in range(ramp):
+        s = start + i
+        if 0 <= s < n_slots:
+            mult[s] = 1.0 + (float(peak_mult) - 1.0) * (i + 1) / ramp
+    for i in range(hold):
+        s = start + ramp + i
+        if 0 <= s < n_slots:
+            mult[s] = float(peak_mult)
+    for i in range(ramp):
+        s = start + ramp + hold + i
+        if 0 <= s < n_slots:
+            mult[s] = 1.0 + (float(peak_mult) - 1.0) * (ramp - 1 - i) / ramp
+    return FaultSchedule(
+        node_up=jnp.ones((n_slots, n_nodes), bool),
+        capacity=jnp.ones((n_slots, n_nodes), jnp.float32),
+        demand_mult=jnp.broadcast_to(
+            jnp.asarray(mult)[:, None], (n_slots, n_nodes)),
+        draining=jnp.zeros((n_slots, n_nodes), bool),
+    )
+
+
+def jitter_table(key: jax.Array, n_tasks: int, jitter: int) -> jnp.ndarray:
+    """(T,) i32 deterministic per-task retry jitter in ``[0, jitter]``.
+
+    Each task's offset is ``fold_in``'d from its id, so the table is a
+    pure function of the run key — replayable, vmappable over seeds, and
+    independent of WHEN the task retries.  Added on top of
+    :func:`backoff_delay` it desynchronizes the retry storm after a mass
+    crash: victims that failed in the same slot stop re-arriving in the
+    same slot.  ``jitter=0`` returns all zeros (the legacy schedule).
+    """
+    if jitter <= 0:
+        return jnp.zeros((n_tasks,), jnp.int32)
+
+    def draw(tid):
+        return jax.random.randint(
+            jax.random.fold_in(key, tid), (), 0, jitter + 1, jnp.int32)
+
+    return jax.vmap(draw)(jnp.arange(n_tasks))
 
 
 def backoff_delay(attempts: jnp.ndarray, backoff: int,

@@ -1,0 +1,144 @@
+"""Misprediction-safe overcommit: drift watchdog + circuit breaker (ISSUE 10).
+
+Flex admits more than users requested *while satisfying QoS* — which only
+holds while the usage estimate L-hat is roughly right.  The penalty
+controller (``core/controller.py``) compensates for noise reactively,
+AFTER QoS violations land; nothing in PR 6-9 detects that the estimator
+itself has drifted (the exact failure mode the fault package's usage
+surges manufacture) or retreats to a safe allocation.  This package is
+that guardrail — the simple-fallback-controller shape of the
+SLA-preserving-consolidation literature (PAPERS.md: Beloglazov/Buyya):
+
+  * an online drift WATCHDOG: a static-shape ring buffer of normalized
+    one-slot-ahead estimator error (the ``traces/analysis.estimator_error``
+    signal, folded per resource) with a windowed-quantile trip statistic;
+  * a closed/open/half-open circuit BREAKER carried as ints: sustained
+    drift opens it (reclamation suspended, live estimate blended back
+    toward requested-based allocation for ``cooldown`` slots), a
+    half-open probe re-admits a bounded reclaim trickle and re-trips or
+    closes;
+  * CONFIDENCE-GATED reclamation while closed: the observed error
+    quantile scales the penalty fed to the ``reclaim``/``migrate``
+    passes, tightening their ``1 - margin_scale * P`` kernel cap
+    continuously before the breaker ever trips (slot-constant scalar —
+    rides the cap template, wavefront invariants hold).
+
+Both front-ends consume :class:`GuardConfig`: ``SimConfig(guard=...)``
+threads the watchdog through the ``lax.scan`` carry; the serving engine
+(``EngineConfig(guard=...)``) runs the same jnp state machine eagerly,
+gating estimator-driven admission with brownout-style deferral while
+open.  ``guard=None`` (the default) is bit-identical to the unguarded
+code at queue/simulator/Experiment/engine level — Python-level gating
+exactly like ``faults``/``migration`` (parity-tested in
+``tests/test_guard.py``).  See docs/api.md "## Guard".
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+from repro.faults.injection import install_config_validator
+from repro.guard.watchdog import (
+    CLOSED,
+    HALF_OPEN,
+    OPEN,
+    blend_estimate,
+    breaker_step,
+    confidence,
+    drift_sample,
+    init_window,
+    penalty_scale,
+    push_errors,
+    reclaim_width,
+    trip_statistic,
+)
+
+
+class GuardConfig(NamedTuple):
+    """Static drift-watchdog + breaker knobs (hashable: a jit-static
+    field of ``SimConfig``/``EngineConfig``).
+    """
+
+    window: int = 16             # drift ring-buffer length (slots/steps of
+                                 # one-slot-ahead error history)
+    err_quantile: float = 0.9    # windowed quantile forming the trip
+                                 # statistic (sustained-drift detector: an
+                                 # outlier slot barely moves it)
+    trip_threshold: float = 0.15  # normalized error the quantile must
+                                  # exceed to open the breaker; also the
+                                  # scale of the confidence ramp below it
+    cooldown: int = 24           # slots/steps the breaker stays OPEN
+                                 # (reclamation suspended, estimate
+                                 # blended toward requests)
+    probe_slots: int = 8         # HALF_OPEN probe length before a clean
+                                 # window closes the breaker
+    probe_reclaim: int = 8       # reclaim candidates re-admitted per slot
+                                 # while HALF_OPEN (the bounded trickle
+                                 # whose drift decides re-trip vs close);
+                                 # on the engine: admissions per step
+    open_blend: float = 1.0      # how far the live estimate retreats
+                                 # toward requested while OPEN (1 = judge
+                                 # placements against full requests,
+                                 # 0 = estimate unchanged)
+    guard_scale: float = 1.0     # strength of confidence-gated
+                                 # reclamation while CLOSED: the
+                                 # reclaim/migrate passes see
+                                 # P * (1 + guard_scale * confidence);
+                                 # 0 disables pre-trip tightening
+
+
+def _validate_guard(cfg: GuardConfig) -> None:
+    """Reject degenerate guard configs at construction (fail fast).
+
+    A non-positive window/cooldown builds a watchdog that can never
+    observe or hold state; an out-of-range quantile crashes inside
+    ``jnp.quantile`` slots later; a non-positive threshold trips on the
+    first nonzero sample.
+    """
+    if cfg.window <= 0:
+        raise ValueError(
+            f"GuardConfig.window must be a positive ring length, "
+            f"got {cfg.window!r}")
+    if not 0.0 <= float(cfg.err_quantile) <= 1.0:
+        raise ValueError(
+            f"GuardConfig.err_quantile must be in [0, 1], "
+            f"got {cfg.err_quantile!r}")
+    if float(cfg.trip_threshold) <= 0.0:
+        raise ValueError(
+            f"GuardConfig.trip_threshold must be > 0, "
+            f"got {cfg.trip_threshold!r}")
+    for knob in ("cooldown", "probe_slots"):
+        if int(getattr(cfg, knob)) <= 0:
+            raise ValueError(
+                f"GuardConfig.{knob} must be a positive slot count, "
+                f"got {getattr(cfg, knob)!r}")
+    if cfg.probe_reclaim < 0:
+        raise ValueError(
+            f"GuardConfig.probe_reclaim must be >= 0, "
+            f"got {cfg.probe_reclaim!r}")
+    if not 0.0 <= float(cfg.open_blend) <= 1.0:
+        raise ValueError(
+            f"GuardConfig.open_blend must be in [0, 1], "
+            f"got {cfg.open_blend!r}")
+    if float(cfg.guard_scale) < 0.0:
+        raise ValueError(
+            f"GuardConfig.guard_scale must be >= 0, "
+            f"got {cfg.guard_scale!r}")
+
+
+install_config_validator(GuardConfig, _validate_guard)
+
+__all__ = [
+    "GuardConfig",
+    "CLOSED",
+    "OPEN",
+    "HALF_OPEN",
+    "blend_estimate",
+    "breaker_step",
+    "confidence",
+    "drift_sample",
+    "init_window",
+    "penalty_scale",
+    "push_errors",
+    "reclaim_width",
+    "trip_statistic",
+]

@@ -1,0 +1,150 @@
+"""Estimator-drift watchdog + circuit breaker (pure jnp, both front-ends).
+
+Every function here is static-shape and eager/trace agnostic, so ONE
+implementation serves the simulator's ``lax.scan`` carry (traced ints and
+ring buffers) and the serving engine's eager per-step loop (numpy scalars
+round-tripped through jnp).  The monitored signal is the one-slot-ahead
+estimator error of ``traces/analysis.estimator_error``: the estimate
+refreshed at slot t is what admission uses for tasks active at t+1, so
+the drift sample at slot t is ``est[t-1]`` against ``usage[t]`` —
+normalized per resource (capacities are 1.0) and averaged over nodes.
+
+The breaker is a three-state machine carried as ints:
+
+  CLOSED (0)     normal operation; the windowed error quantile
+                 continuously tightens the reclaim/migrate safety cap
+                 (``penalty_scale``) before anything trips.
+  OPEN (1)       sustained drift (windowed quantile above
+                 ``trip_threshold``): reclamation suspended, the live
+                 estimate blended back toward requested-based allocation
+                 (``blend_estimate``); holds for ``cooldown`` slots.
+  HALF_OPEN (2)  probe: a bounded reclaim trickle (``probe_reclaim``) is
+                 re-admitted for ``probe_slots`` slots; renewed drift
+                 re-trips to OPEN, a clean probe closes the breaker.
+
+``push_errors`` reuses the ``faults.degrade.push_window`` ring idiom
+(roll + set, newest sample at row 0); the ring starts at zero error, so a
+cold window can never trip the breaker.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# Breaker states (carried as int32 scalars through the scan).
+CLOSED = 0
+OPEN = 1
+HALF_OPEN = 2
+
+
+def init_window(window: int, n_resources: int) -> jnp.ndarray:
+    """(W, R) f32 drift ring buffer; zero error = a trusted estimator."""
+    return jnp.zeros((window, n_resources), jnp.float32)
+
+
+def drift_sample(prev_est: jnp.ndarray, usage: jnp.ndarray) -> jnp.ndarray:
+    """(R,) normalized one-slot-ahead error: mean_N |est[t-1] - usage[t]|.
+
+    Same signal as ``analysis.estimator_error`` (est at t vs usage at
+    t+1), folded to a per-resource scalar: the mean absolute per-node
+    error in capacity units.  Drift in either direction marks the
+    estimator untrustworthy — under-estimation breaks QoS directly,
+    over-estimation means the confidence the reclaim cap leans on is
+    fiction.
+    """
+    return jnp.mean(jnp.abs(prev_est - usage), axis=0)
+
+
+def push_errors(window: jnp.ndarray, err: jnp.ndarray) -> jnp.ndarray:
+    """Ring-push one (R,) drift sample; newest at row 0 (degrade idiom)."""
+    return jnp.roll(window, 1, axis=0).at[0].set(err)
+
+
+def trip_statistic(window: jnp.ndarray, q: float) -> jnp.ndarray:
+    """() f32: the worst per-resource windowed error quantile.
+
+    The quantile-over-window makes the trip condition a SUSTAINED-drift
+    detector: a single outlier slot moves the q-quantile of W samples
+    barely, a persistent ramp moves it fast.
+    """
+    return jnp.max(jnp.quantile(window, q, axis=0))
+
+
+def confidence(err_q: jnp.ndarray, gcfg) -> jnp.ndarray:
+    """() f32 in [0, 1]: observed drift as a fraction of the trip bar."""
+    return jnp.clip(err_q / jnp.float32(gcfg.trip_threshold), 0.0, 1.0)
+
+
+def penalty_scale(err_q: jnp.ndarray, gcfg) -> jnp.ndarray:
+    """Slot-constant multiplier for the reclaim/migrate pass penalty.
+
+    ``P_eff = P * (1 + guard_scale * confidence)`` tightens the policies'
+    penalty-derived kernel cap ``1 - margin_scale * P_eff`` (and their
+    ``P_eff * L-hat`` load term) CONTINUOUSLY while the breaker is still
+    closed — reclamation backs off in proportion to observed drift before
+    the trip, and the scalar is admission-invariant within a slot so every
+    wavefront/dedup soundness invariant holds (docs/kernels.md).
+    """
+    return 1.0 + jnp.float32(gcfg.guard_scale) * confidence(err_q, gcfg)
+
+
+def breaker_step(state: jnp.ndarray, timer: jnp.ndarray,
+                 err_q: jnp.ndarray, gcfg):
+    """One slot of the breaker state machine.
+
+    Returns ``(state, timer, tripped)`` — the state that GOVERNS the
+    current slot (transitions apply immediately: the drift measured this
+    slot gates this slot's admission passes).  ``timer`` counts remaining
+    OPEN/HALF_OPEN slots; a trip from any state re-arms the full
+    ``cooldown``, an OPEN window that expires while drift persists
+    re-opens rather than probing.
+    """
+    state = jnp.asarray(state, jnp.int32)
+    timer = jnp.asarray(timer, jnp.int32)
+    tripped = err_q > jnp.float32(gcfg.trip_threshold)
+    is_open = state == OPEN
+    is_half = state == HALF_OPEN
+    open_expired = is_open & (timer <= 1)
+    to_open = tripped & (~is_open | open_expired)
+    to_half = open_expired & ~tripped
+    half_closes = is_half & ~tripped & (timer <= 1)
+    next_state = jnp.where(
+        to_open, OPEN,
+        jnp.where(to_half, HALF_OPEN,
+                  jnp.where(half_closes, CLOSED, state)))
+    next_timer = jnp.where(
+        to_open, jnp.int32(gcfg.cooldown),
+        jnp.where(to_half, jnp.int32(gcfg.probe_slots),
+                  jnp.maximum(timer - 1, 0)))
+    return (next_state.astype(jnp.int32), next_timer.astype(jnp.int32),
+            tripped)
+
+
+def blend_estimate(est: jnp.ndarray, requested: jnp.ndarray,
+                   is_open, gcfg) -> jnp.ndarray:
+    """Safe-mode estimate: blend toward requested-based allocation.
+
+    While the breaker is OPEN the estimator has demonstrably drifted, so
+    admission falls back toward the one thing still trustworthy: what
+    tasks REQUESTED.  ``est + open_blend * max(requested - est, 0)`` —
+    at ``open_blend = 1`` new placements are judged against full
+    requests (LeastFit-safe), at 0 the estimate is used as-is; the max
+    keeps the fallback one-sided (never below the live estimate).
+    Closed/half-open slots pass the estimate through unchanged.
+    """
+    w = jnp.where(jnp.asarray(is_open),
+                  jnp.float32(gcfg.open_blend), jnp.float32(0.0))
+    return est + w * jnp.maximum(requested - est, 0.0)
+
+
+def reclaim_width(state: jnp.ndarray, pool_width: int, gcfg) -> jnp.ndarray:
+    """() i32: how many head-of-pool reclaim candidates stay valid.
+
+    Full pool while CLOSED, zero while OPEN (reclamation suspended), a
+    bounded ``probe_reclaim`` trickle while HALF_OPEN — the probe traffic
+    whose drift decides re-trip vs close.
+    """
+    probe = min(int(gcfg.probe_reclaim), int(pool_width))
+    return jnp.where(
+        jnp.asarray(state) == OPEN, jnp.int32(0),
+        jnp.where(jnp.asarray(state) == HALF_OPEN, jnp.int32(probe),
+                  jnp.int32(pool_width)))

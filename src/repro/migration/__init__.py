@@ -70,4 +70,37 @@ class MigrationConfig(NamedTuple):
                                  # pass; 0 = full capacity targets
 
 
+def _validate_migration(cfg: MigrationConfig) -> None:
+    """Reject degenerate migration configs at construction (fail fast).
+
+    A non-positive bandwidth/pool builds a zero-width migrate pass that
+    silently strands every drain announcement; negative costs/thresholds
+    corrupt the runtime accounting deep inside the scan.
+    """
+    if cfg.bandwidth < 0:
+        raise ValueError(
+            f"MigrationConfig.bandwidth must be >= 0 (0 = no migration "
+            f"budget, the evict-and-retry fallback), got {cfg.bandwidth!r}")
+    if cfg.migrate_cost < 0:
+        raise ValueError(
+            f"MigrationConfig.migrate_cost must be >= 0, "
+            f"got {cfg.migrate_cost!r}")
+    if cfg.pool_size <= 0:
+        raise ValueError(
+            f"MigrationConfig.pool_size must be a positive pool width, "
+            f"got {cfg.pool_size!r}")
+    if float(cfg.overload_threshold) < 0.0:
+        raise ValueError(
+            f"MigrationConfig.overload_threshold must be >= 0, "
+            f"got {cfg.overload_threshold!r}")
+    if float(cfg.margin_scale) < 0.0:
+        raise ValueError(
+            f"MigrationConfig.margin_scale must be >= 0, "
+            f"got {cfg.margin_scale!r}")
+
+
+from repro.faults.injection import install_config_validator as _install
+
+_install(MigrationConfig, _validate_migration)
+
 __all__ = ["MigrationConfig"]

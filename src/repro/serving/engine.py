@@ -219,6 +219,15 @@ class EngineConfig:
                                        # ``faults``.  None = bit-identical
                                        # to the migration-free engine
                                        # (docs/api.md, "Migration")
+    guard: "object | None" = None      # repro.guard.GuardConfig: estimator-
+                                       # drift watchdog + circuit breaker —
+                                       # while OPEN, estimator-driven
+                                       # (sub-production) admission defers
+                                       # brownout-style and the estimate
+                                       # snapshot blends toward declared
+                                       # footprints.  None = bit-identical
+                                       # to the unguarded engine
+                                       # (docs/api.md, "Guard")
 
 
 @dataclasses.dataclass
@@ -242,6 +251,11 @@ class EngineStats:
     migration_failed: int = 0  # migration candidates that fell back to the
                                # evict-and-restart path (no feasible target
                                # before the fault landed / budget exceeded)
+    guard_trips: int = 0       # breaker transitions into OPEN (drift trips)
+    guard_open_steps: int = 0  # steps spent with the breaker OPEN
+    guard_deferred: int = 0    # admission decisions deferred by the breaker
+                               # (suspension while OPEN + trickle clipping
+                               # while HALF_OPEN)
 
 
 class ServeEngine:
@@ -308,6 +322,18 @@ class ServeEngine:
         self._est_key = jax.random.PRNGKey(seed)
         self._usage_snap = np.zeros(cfg.n_replicas)
         self._declared_snap = np.zeros(cfg.n_replicas)
+        # Estimator-drift guard (repro.guard): the SAME jnp watchdog as the
+        # simulator scan, run eagerly once per step on the KV-footprint
+        # estimate.  Consumes no randomness, so guard=None engines are
+        # bit-identical structurally (parity-tested in tests/test_guard.py).
+        if cfg.guard is not None:
+            from repro.guard import watchdog as _wdmod
+
+            self._wd = _wdmod
+            self._g_win = _wdmod.init_window(cfg.guard.window, 1)
+            self._g_state = _wdmod.CLOSED
+            self._g_timer = 0
+            self._g_err_q = 0.0
         # One compiled admission entry per engine (jit re-specializes per
         # padded queue width): the engine-side batched front-end onto the
         # shared admission core.
@@ -482,14 +508,57 @@ class ServeEngine:
 
     # ---------------- admission (the Flex core) ----------------
 
+    def _guard_observe(self, measured: np.ndarray):
+        """One watchdog step: drift of LAST round's estimate vs this round's
+        measured usage (the one-slot-ahead error the simulator monitors),
+        normalized to KV-capacity units.  Runs BEFORE the estimator refresh
+        — the refreshed estimate hasn't gated any admission yet."""
+        gcfg = self.cfg.guard
+        kv_cap = float(self.cfg.kv_budget_tokens)
+        prev = np.asarray(self._est_state.est[:, :1], float) / kv_cap
+        err = self._wd.drift_sample(
+            jnp.asarray(prev, jnp.float32),
+            jnp.asarray(measured[:, None] / kv_cap, jnp.float32))
+        self._g_win = self._wd.push_errors(self._g_win, err)
+        err_q = self._wd.trip_statistic(self._g_win, gcfg.err_quantile)
+        was_open = self._g_state == self._wd.OPEN
+        s, t, _ = self._wd.breaker_step(
+            jnp.int32(self._g_state), jnp.int32(self._g_timer), err_q, gcfg)
+        self._g_state, self._g_timer = int(s), int(t)
+        self._g_err_q = float(err_q)
+        if self._g_state == self._wd.OPEN and not was_open:
+            self.stats.guard_trips += 1
+        if self._g_state == self._wd.OPEN:
+            self.stats.guard_open_steps += 1
+
+    def _guard_penalty(self) -> float:
+        """Penalty for the migrate pass: confidence-scaled while guarded
+        (the engine analogue of the simulator's reclaim/migrate-cap
+        tightening — still a per-pass scalar, kernel-cap sound)."""
+        pen = float(self.ctrl.penalty)
+        if self.cfg.guard is not None:
+            pen *= float(self._wd.penalty_scale(
+                jnp.float32(self._g_err_q), self.cfg.guard))
+        return pen
+
     def refresh_snapshots(self):
         """Advance the estimator on measured usage; refresh round snapshots."""
         measured = self._usage()
+        if self.cfg.guard is not None:
+            self._guard_observe(measured)
         key = jax.random.fold_in(self._est_key, self.stats.steps)
         self._est_state = self.estimator.refresh(
             self._est_state, jnp.asarray(measured[:, None], jnp.float32), key)
         self._usage_snap = np.asarray(self._est_state.est[:, 0], float)
         self._declared_snap = self._declared()
+        if (self.cfg.guard is not None
+                and self._g_state == self._wd.OPEN):
+            # safe mode: this round's admission judges replicas by the
+            # estimate blended toward DECLARED footprints (blend_estimate
+            # semantics; the raw estimator state keeps evolving untouched)
+            w = float(self.cfg.guard.open_blend)
+            self._usage_snap = self._usage_snap + w * np.maximum(
+                self._declared_snap - self._usage_snap, 0.0)
 
     def _admit_eager(self, node: NodeState, r: np.ndarray, srcs: np.ndarray,
                      prios: np.ndarray, order: np.ndarray,
@@ -583,6 +652,20 @@ class ServeEngine:
             valid &= prios >= CLASS_PRODUCTION
             self.stats.brownout_steps += 1
             self.stats.brownout_deferred += int((~valid).sum())
+        if self.cfg.guard is not None and self._g_state != self._wd.CLOSED:
+            # circuit breaker: while OPEN, estimator-driven (sub-production)
+            # admission defers brownout-style — production still lands,
+            # judged against the blended (declared-based) snapshots; while
+            # HALF_OPEN, a bounded FIFO-head trickle of deferred traffic
+            # probes whether the estimator recovered.
+            before = valid.copy()
+            allow = prios >= CLASS_PRODUCTION
+            if self._g_state == self._wd.HALF_OPEN:
+                trickle = np.zeros(len(reqs), bool)
+                trickle[:int(self.cfg.guard.probe_reclaim)] = True
+                allow = allow | trickle
+            valid &= allow
+            self.stats.guard_deferred += int((before & ~valid).sum())
         order = np.arange(len(reqs))
         hook = policy_queue_order(self.policy)
         if hook is not None:
@@ -660,7 +743,7 @@ class ServeEngine:
         valid = np.arange(pad) < q_eff
         _, pl = self._migrate_fn(node, jnp.asarray(sl), jnp.asarray(ss),
                                  jnp.asarray(pp), jnp.asarray(valid),
-                                 jnp.asarray(float(self.ctrl.penalty),
+                                 jnp.asarray(self._guard_penalty(),
                                              jnp.float32))
         pl = np.asarray(pl[:q_eff])
         moved = []

@@ -181,6 +181,38 @@ def fault_recovery(result: SimResult, qos_target: float,
     }
 
 
+def guard_report(result: SimResult) -> Dict[str, float]:
+    """Drift-watchdog summary (``SimConfig(guard=GuardConfig(...))``).
+
+    ``guard_trips`` counts breaker transitions into OPEN, ``open_frac`` /
+    ``half_open_frac`` the fraction of slots spent in each non-closed
+    state, ``n_guard_deferred`` the reclaim candidates the breaker held
+    back (suspension + trickle clipping), and ``err_q_max`` / ``err_q_mean``
+    the windowed drift quantile the trip condition acted on.  Raises
+    :class:`ValueError` when the run was unguarded — the guard leaves of
+    :class:`SlotMetrics` are empty then, exactly like the per-node series
+    of :func:`estimator_error`.
+    """
+    m = result.metrics
+    if m.guard_tripped.size == 0:
+        raise ValueError(
+            "guard_report needs the drift-watchdog series "
+            "(SlotMetrics.guard_tripped is empty); run the simulation "
+            "with SimConfig(guard=GuardConfig(...))")
+    state = m.guard_tripped
+    opened = state == 1
+    prev = jnp.concatenate(
+        [jnp.zeros_like(opened[..., :1]), opened[..., :-1]], axis=-1)
+    return {
+        "guard_trips": int(jnp.sum(opened & ~prev)),
+        "open_frac": float(jnp.mean(opened.astype(jnp.float32))),
+        "half_open_frac": float(jnp.mean((state == 2).astype(jnp.float32))),
+        "n_guard_deferred": int(m.n_guard_deferred[..., -1].max()),
+        "err_q_max": float(jnp.max(m.guard_err_q)),
+        "err_q_mean": float(jnp.mean(m.guard_err_q)),
+    }
+
+
 def summarize(ts: TaskSet, result: SimResult, qos_target: float) -> Dict[str, float]:
     """One-stop summary used by benchmarks (utilization, QoS, admission).
 
@@ -215,5 +247,13 @@ def summarize(ts: TaskSet, result: SimResult, qos_target: float) -> Dict[str, fl
             "estimator_error, overprovisioning, zombie_nodes) — per-node "
             "series were not recorded; pass "
             "SimConfig(record_node_usage=True) to include them",
+            stacklevel=2)
+    if m.guard_tripped.size:
+        out.update(guard_report(result))
+    else:
+        warnings.warn(
+            "summarize: skipping guard keys (guard_report) — the run was "
+            "unguarded; pass SimConfig(guard=GuardConfig(...)) to include "
+            "them",
             stacklevel=2)
     return out

@@ -242,6 +242,61 @@ def test_migrate_rows_required_on_latest_run_only():
     assert any("fault_crash_migrate" in p for p in probs), probs
 
 
+def test_estimator_gap_trajectory_is_required():
+    assert "BENCH_estimator_gap.json" in check_bench.REQUIRED_FILES
+    assert (ROOT / "BENCH_estimator_gap.json").exists(), (
+        "BENCH_estimator_gap.json missing: record it via "
+        "`python benchmarks/run.py --json --only estimator_gap`")
+
+
+def test_guard_rows_required_on_latest_run_only():
+    # Older estimator-gap runs predate the drift watchdog and must stay
+    # valid; only the newest run is held to the guard-surge requirement.
+    guarded = [{"name": "estgap_current", "us_per_call": 9.0},
+               {"name": "guard_surge_unguarded", "us_per_call": 9.0,
+                "qos_min": 0.84},
+               {"name": "guard_surge_guarded", "us_per_call": 9.0,
+                "qos_min": 1.0, "admitted_gain_retained": 1.27}]
+    legacy = [{"name": "estgap_current", "us_per_call": 9.0}]
+    doc = {"bench": "estimator_gap",
+           "runs": [_run("old1234", legacy), _run("new1234", guarded)]}
+    assert check_bench.schema_problems("f", doc) == []
+    doc["runs"].reverse()
+    probs = check_bench.schema_problems("f", doc)
+    assert any("guard_surge_unguarded" in p for p in probs), probs
+    assert any("guard_surge_guarded" in p for p in probs), probs
+
+
+def test_guard_rows_require_acceptance_metrics():
+    # A guarded row without the retained-upside metric is exactly the
+    # silent drift the requirement exists for.
+    rows = [{"name": "guard_surge_unguarded", "us_per_call": 9.0,
+             "qos_min": 0.84},
+            {"name": "guard_surge_guarded", "us_per_call": 9.0,
+             "qos_min": 1.0}]
+    doc = {"bench": "estimator_gap", "runs": [_run("abc1234", rows)]}
+    probs = check_bench.schema_problems("f", doc)
+    assert any("admitted_gain_retained" in p for p in probs), probs
+
+
+def test_guard_trajectory_contents():
+    """The recorded trajectory carries the ISSUE 10 acceptance numbers:
+    the guarded run holds qos_min >= 0.95 * target where the unguarded
+    predictive+reclamation run violates it, while retaining >= 70% of
+    the unguarded admission gain outside the surge window."""
+    with open(ROOT / "BENCH_estimator_gap.json") as f:
+        doc = json.load(f)
+    assert check_bench.schema_problems(
+        "BENCH_estimator_gap.json", doc) == []
+    rows = {r["name"]: r for r in doc["runs"][-1]["rows"]}
+    qos_floor = 0.95 * 0.99
+    assert rows["guard_surge_unguarded"]["qos_min"] < qos_floor, (
+        "the unguarded overcommit stack no longer violates QoS under the "
+        "surge — the guard has nothing to demonstrate")
+    assert rows["guard_surge_guarded"]["qos_min"] >= qos_floor
+    assert rows["guard_surge_guarded"]["admitted_gain_retained"] >= 0.7
+
+
 def test_fault_recovery_trajectory_contents():
     """The recorded trajectory carries the ISSUE 8 acceptance numbers:
     graceful degradation recovers within the post-burst window while

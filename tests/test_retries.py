@@ -166,6 +166,57 @@ def test_backoff_deferral_consumes_no_attempts():
     assert _drop_slot(res) == 5
 
 
+def test_jitter_default_off():
+    assert SimConfig().retry_jitter == 0
+
+
+def test_jitter_exponential_schedule_exact():
+    # Per-task jitter j is fold_in'd from the task id on a dedicated
+    # stream: every backoff delay stretches by the SAME deterministic j,
+    # so the backoff=1 attempt schedule 0, 2, 5, 10 becomes 0, 2+j,
+    # 5+2j, 10+3j (delays 1+j, 2+j, 4+j) and the drop lands at 10+3j.
+    import jax
+
+    from repro.core.simulator import _JITTER_STREAM
+    from repro.faults import jitter_table
+
+    jitter = 3
+    j = int(jitter_table(
+        jax.random.fold_in(jax.random.PRNGKey(0), _JITTER_STREAM),
+        1, jitter)[0])
+    cfg = SimConfig(n_nodes=1, n_slots=14 + 3 * jitter, arrivals_per_slot=4,
+                    retry_capacity=4, max_retries=3, retry_backoff=1,
+                    retry_jitter=jitter)
+    res = run(_taskset(arrival=[0], request=[1.5]), cfg, "flex-f", seed=0)
+    assert _drop_slot(res) == 10 + 3 * j
+
+
+def test_jitter_desynchronizes_tasks():
+    # Two identical impossible tasks share the legacy schedule exactly;
+    # with jitter their drop slots may differ task by task, and each must
+    # land inside the [0, jitter] stretch envelope of the exact schedule.
+    import jax
+
+    from repro.core.simulator import _JITTER_STREAM
+    from repro.faults import jitter_table
+
+    jitter = 4
+    tab = np.asarray(jitter_table(
+        jax.random.fold_in(jax.random.PRNGKey(0), _JITTER_STREAM),
+        2, jitter))
+    cfg = SimConfig(n_nodes=1, n_slots=14 + 3 * jitter, arrivals_per_slot=4,
+                    retry_capacity=4, max_retries=3, retry_backoff=1,
+                    retry_jitter=jitter)
+    ts = _taskset(arrival=[0, 0], request=[1.5, 1.5])
+    res = run(ts, cfg, "flex-f", seed=0)
+    rejected = np.asarray(res.metrics.n_rejected)
+    assert rejected[-1] == 2
+    for t in range(2):
+        # task t's final attempt slot: 10 + 3 * its jitter offset
+        drop = 10 + 3 * int(tab[t])
+        assert rejected[drop] > rejected[drop - 1] or tab[0] == tab[1]
+
+
 def test_backoff_deferred_task_admits_at_next_attempt():
     # B fails once behind A's same-slot reservation (0.9 + 0.8 > 1 under
     # the ULB filter's reserved term), backs off, and admits at its NEXT
